@@ -1,0 +1,90 @@
+"""Shared benchmark utilities: timing, bound registry, datasets."""
+
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import envelope, lb_enhanced_matrix, lb_keogh_matrix
+from repro.core.dtw import dtw_pairs
+from repro.core.lower_bounds import (
+    lb_improved,
+    lb_kim,
+    lb_new,
+)
+from repro.search.cascade import lb_kim_tier
+from repro.search.index import build_index
+
+
+def time_fn(fn: Callable, *args, repeats: int = 3) -> float:
+    """Median wall seconds for jitted fn (post-warmup)."""
+    out = fn(*args)
+    jax.block_until_ready(out)
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def bound_matrix(name: str, q, c, w: int):
+    """(Q, C) matrix of the named bound (vectorised paths where available)."""
+    qj, cj = jnp.asarray(q), jnp.asarray(c)
+    if name == "lb_kim":
+        idx = build_index(cj, w)
+        return lb_kim_tier(qj, idx)
+    if name == "lb_keogh":
+        u, lo = envelope(cj, w)
+        return lb_keogh_matrix(qj, u, lo)
+    if name.startswith("lb_enhanced"):
+        v = int(name.rsplit("_", 1)[-1])
+        u, lo = envelope(cj, w)
+        return lb_enhanced_matrix(qj, cj, u, lo, w, v)
+    if name == "lb_improved":
+        f = jax.vmap(jax.vmap(lb_improved, (None, 0, None)), (0, None, None))
+        return f(qj, cj, w)
+    if name == "lb_new":
+        f = jax.vmap(jax.vmap(lb_new, (None, 0, None)), (0, None, None))
+        return f(qj, cj, w)
+    raise ValueError(name)
+
+
+BOUNDS = (
+    "lb_kim",
+    "lb_keogh",
+    "lb_improved",
+    "lb_new",
+    "lb_enhanced_1",
+    "lb_enhanced_2",
+    "lb_enhanced_3",
+    "lb_enhanced_4",
+)
+
+
+def dtw_matrix(q, c, w: int):
+    return dtw_pairs(jnp.asarray(q), jnp.asarray(c), w)
+
+
+def simulate_sequential_pruning(
+    lb: np.ndarray, d: np.ndarray, order: np.ndarray | None = None
+) -> float:
+    """The paper's NN-DTW loop semantics (SS IV-A): walk candidates in
+    order, skip when LB >= best-so-far.  Returns mean pruning power P."""
+    T, N = lb.shape
+    if order is None:
+        order = np.arange(N)
+    skipped = 0
+    for t in range(T):
+        best = np.inf
+        for j in order:
+            if lb[t, j] >= best:
+                skipped += 1
+            else:
+                best = min(best, d[t, j])
+    return skipped / (T * N)

@@ -1,0 +1,52 @@
+"""Kernel micro-benchmarks: Pallas (interpret on CPU) vs pure-jnp refs.
+
+On this CPU container the interpret-mode numbers measure *semantics*, not
+TPU performance — the derived column carries the roofline-relevant byte/
+flop counts per call so EXPERIMENTS.md can relate them to the v5e targets.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import time_fn
+from repro.data import random_pairs
+from repro.kernels import ref
+from repro.kernels.ops import envelope_op, lb_enhanced_op, lb_keogh_op
+
+
+def kernel_rows() -> list[str]:
+    rows = []
+    Q, C, L, w, v = 16, 256, 128, 38, 4
+    q, c = random_pairs(max(Q, C), L, seed=1)
+    qj = jnp.asarray(q[:Q])
+    cj = jnp.asarray(c[:C])
+    u, lo = envelope_op(cj, w)
+
+    sec = time_fn(lambda b: ref.envelope_ref(b, w), cj)
+    rows.append(
+        f"envelope_jnp_{C}x{L},{1e6 * sec / C:.2f},"
+        f"bytes_per_series={L * 4 * 3}"
+    )
+    sec = time_fn(lambda a, b, e1, e2: ref.lb_keogh_ref(a, e1, e2), qj, cj, u, lo)
+    rows.append(
+        f"lb_keogh_jnp_{Q}x{C}x{L},{1e6 * sec / (Q * C):.3f},"
+        f"flops_per_pair={4 * L}"
+    )
+    sec = time_fn(
+        lambda a, b, e1, e2: ref.lb_enhanced_ref(a, b, e1, e2, w, v),
+        qj, cj, u, lo,
+    )
+    rows.append(
+        f"lb_enhanced4_jnp_{Q}x{C}x{L},{1e6 * sec / (Q * C):.3f},"
+        f"flops_per_pair={4 * L + 4 * v * v}"
+    )
+    P = 64
+    a2, b2 = random_pairs(P, L, seed=2)
+    sec = time_fn(lambda x, y: ref.dtw_band_ref(x, y, w), jnp.asarray(a2), jnp.asarray(b2))
+    rows.append(
+        f"dtw_band_jnp_{P}x{L},{1e6 * sec / P:.1f},"
+        f"flops_per_pair={10 * L * min(2 * w + 1, L)}"
+    )
+    return rows

@@ -1,0 +1,130 @@
+"""Paper-table benchmarks (Tables I-III + Fig. 1 analogs) on synthetic
+UCR-like datasets.
+
+Each function returns a list of CSV rows ``name,us_per_call,derived`` where
+``derived`` carries the table's actual quantity (tightness / pruning power
+/ rank / classification time ratio).
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import (
+    BOUNDS,
+    bound_matrix,
+    dtw_matrix,
+    simulate_sequential_pruning,
+    time_fn,
+)
+from repro.data import make_dataset, random_pairs
+from repro.search import CascadeConfig, EngineConfig, build_index, nn_search
+
+WINDOW_FRACTIONS = (0.1, 0.3, 0.6, 1.0)
+
+
+def _datasets(n=3, L=96):
+    return [
+        make_dataset(n_classes=3, n_train_per_class=15, n_test_per_class=5,
+                     length=L, seed=s)
+        for s in range(n)
+    ]
+
+
+def table1_tightness() -> list[str]:
+    """Table I analog: mean tightness LB/DTW per bound per window."""
+    rows = []
+    datasets = _datasets()
+    for frac in WINDOW_FRACTIONS:
+        per_bound: dict[str, list[float]] = {b: [] for b in BOUNDS}
+        for ds in datasets:
+            w = max(1, int(frac * ds.length))
+            d = np.array(dtw_matrix(ds.x_test, ds.x_train, w))
+            for b in BOUNDS:
+                t0 = time.perf_counter()
+                lb = np.array(bound_matrix(b, ds.x_test, ds.x_train, w))
+                dt = time.perf_counter() - t0
+                tight = np.mean(lb / np.maximum(d, 1e-9))
+                per_bound[b].append((tight, dt, lb.size))
+        # mean tightness + rank per bound at this window
+        means = {b: np.mean([x[0] for x in per_bound[b]]) for b in BOUNDS}
+        order = sorted(means, key=means.get, reverse=True)
+        for b in BOUNDS:
+            us = 1e6 * np.sum([x[1] for x in per_bound[b]]) / np.sum(
+                [x[2] for x in per_bound[b]]
+            )
+            rank = order.index(b) + 1
+            rows.append(
+                f"tightness_w{frac:.1f}_{b},{us:.3f},"
+                f"tightness={means[b]:.4f};rank={rank}"
+            )
+    return rows
+
+
+def table2_pruning_power() -> list[str]:
+    """Table II analog: paper-semantics sequential pruning power."""
+    rows = []
+    datasets = _datasets()
+    for frac in WINDOW_FRACTIONS:
+        for b in BOUNDS:
+            ps = []
+            for ds in datasets:
+                w = max(1, int(frac * ds.length))
+                d = np.array(dtw_matrix(ds.x_test, ds.x_train, w))
+                lb = np.array(bound_matrix(b, ds.x_test, ds.x_train, w))
+                ps.append(simulate_sequential_pruning(lb, d))
+            rows.append(
+                f"pruning_w{frac:.1f}_{b},0.0,P={np.mean(ps):.4f}"
+            )
+    return rows
+
+
+def table3_nn_time() -> list[str]:
+    """Table III analog: engine NN-DTW wall time per bound config.
+
+    The engine's cascade always includes the O(1) Kim tier; the O(L) tier is
+    the named bound (ENHANCED^0 == KEOGH bridge only)."""
+    rows = []
+    ds = _datasets(n=1, L=96)[0]
+    for frac in WINDOW_FRACTIONS:
+        w = max(1, int(frac * ds.length))
+        for v in (0, 1, 2, 4):           # v=0 -> pure Keogh bridge
+            idx = build_index(ds.x_train, w, ds.y_train)
+            cfg = EngineConfig(
+                cascade=CascadeConfig(w=w, v=v), verify_chunk=8, k=1
+            )
+            fn = lambda q: nn_search(idx, q, cfg).dists
+            sec = time_fn(fn, jnp.asarray(ds.x_test))
+            res = nn_search(idx, ds.x_test, cfg)
+            p = float(np.mean(np.array(res.pruning_power())))
+            name = "lb_keogh" if v == 0 else f"lb_enhanced_{v}"
+            us = 1e6 * sec / ds.x_test.shape[0]
+            rows.append(
+                f"nn_time_w{frac:.1f}_{name},{us:.1f},P={p:.4f}"
+            )
+    return rows
+
+
+def fig1_tightness_vs_time() -> list[str]:
+    """Fig. 1 analog: tightness vs per-pair compute time, random pairs,
+    L=256, W=0.3L (the paper's protocol, reduced pair count for CPU)."""
+    rows = []
+    L = 256
+    a, b = random_pairs(64, L, seed=0)
+    w = int(0.3 * L)
+    d = None
+    for bound in BOUNDS:
+        fn = jax.jit(lambda q, c: bound_matrix(bound, q, c, w))
+        # per-pair timing over the 64x64 matrix
+        sec = time_fn(fn, jnp.asarray(a), jnp.asarray(b))
+        lb = np.array(fn(jnp.asarray(a), jnp.asarray(b)))
+        if d is None:
+            d = np.array(dtw_matrix(a, b, w))
+        tight = float(np.mean(lb / np.maximum(d, 1e-9)))
+        us = 1e6 * sec / lb.size
+        rows.append(f"fig1_{bound},{us:.3f},tightness={tight:.4f}")
+    return rows

@@ -1,0 +1,29 @@
+"""Roofline table assembly from results/dryrun JSONs (SSRoofline)."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+
+def roofline_rows(result_dir: str = "results/dryrun") -> list[str]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(result_dir, "single__*.json"))):
+        r = json.load(open(path))
+        cell = f"{r['arch']}__{r['shape']}"
+        if r.get("status") == "skip":
+            rows.append(f"roofline_{cell},0.0,SKIP:{r['reason'][:60]}")
+            continue
+        rf = r.get("roofline")
+        if not rf:
+            continue
+        rows.append(
+            f"roofline_{cell},{rf['bound_step_s'] * 1e6:.0f},"
+            f"dominant={rf['dominant']};"
+            f"compute_s={rf['compute_s']:.3g};"
+            f"memory_s={rf['memory_s']:.3g};"
+            f"collective_s={rf['collective_s']:.3g};"
+            f"frac={rf['roofline_fraction']:.4f}"
+        )
+    return rows

@@ -1,0 +1,10 @@
+"""repro — Elastic-band DTW lower bounds (LB_ENHANCED) at pod scale.
+
+Pillar A (the paper): ``repro.core`` (bounds + DTW), ``repro.kernels``
+(Pallas TPU kernels), ``repro.search`` (exact pruned NN-DTW engine).
+Pillar B (substrate): ``repro.models``/``configs``/``train``/``serve``/
+``distributed``/``launch`` — the ten assigned architectures under the
+production (pod, data, model) mesh.  See DESIGN.md.
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,1 @@
+"""Configs: 10 assigned architectures + shapes + the paper's search config."""

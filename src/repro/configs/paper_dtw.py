@@ -1,0 +1,28 @@
+"""The paper's own workload as a dry-run cell: pod-scale NN-DTW search.
+
+A million-series candidate store (the regime the paper's introduction says
+NN-DTW "does not scale" to) sharded over the data axes, a query batch over
+the model axis, LB_ENHANCED^4 cascade + banded-DTW verification.  W = 0.3L
+matches the paper's Fig. 1 protocol.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class PaperSearchConfig:
+    name: str = "search_1m"
+    n_store: int = 1_048_576       # 2^20 candidate series
+    length: int = 512
+    n_queries: int = 2048
+    w: int = 154                   # 0.3 * L (paper Fig. 1)
+    v: int = 4                     # the paper's recommended variant
+    k: int = 1
+    verify_chunk: int = 64
+    candidate_chunk: int = 512
+    expected_verify: int = 64      # expected DTW verifications per query
+
+
+PAPER_SEARCH = PaperSearchConfig()

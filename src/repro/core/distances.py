@@ -1,0 +1,55 @@
+"""Pointwise and pairwise distance primitives.
+
+The paper (SS II-A) uses the squared L2 norm as the per-link cost
+``delta(a, b) = (a - b)^2`` and minimises ``D(L, L)`` directly (no square
+root).  Everything in this package follows that convention: DTW values and
+lower bounds are *sums of squared differences*.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def delta(a: Array, b: Array) -> Array:
+    """Per-link cost ``(a - b)^2`` (paper Eq. 1/2 convention)."""
+    d = a - b
+    return d * d
+
+
+def znorm(x: Array, axis: int = -1, eps: float = 1e-8) -> Array:
+    """Z-normalise a series along ``axis`` (UCR convention)."""
+    mu = jnp.mean(x, axis=axis, keepdims=True)
+    sd = jnp.std(x, axis=axis, keepdims=True)
+    return (x - mu) / (sd + eps)
+
+
+def squared_euclidean(a: Array, b: Array) -> Array:
+    """Squared Euclidean distance between two equal-length series.
+
+    This equals ``DTW_0(a, b)`` (paper SS II-A: W=0 is the Euclidean
+    distance), and is the cheapest exact-DTW special case in the cascade.
+    """
+    return jnp.sum(delta(a, b), axis=-1)
+
+
+def squared_euclidean_matrix(q: Array, c: Array) -> Array:
+    """All-pairs squared Euclidean distances via the MXU-friendly
+    ``|q|^2 + |c|^2 - 2 q.c^T`` factorisation.
+
+    Args:
+      q: ``(Q, L)`` query series.
+      c: ``(C, L)`` candidate series.
+
+    Returns:
+      ``(Q, C)`` matrix of squared distances.  This is the one part of the
+      lower-bound cascade that maps onto the MXU (see DESIGN.md SS3) — the
+      clamped envelope bounds are elementwise and run on the VPU.
+    """
+    qq = jnp.sum(q * q, axis=-1)[:, None]
+    cc = jnp.sum(c * c, axis=-1)[None, :]
+    qc = q @ c.T
+    return jnp.maximum(qq + cc - 2.0 * qc, 0.0)

@@ -1,0 +1,116 @@
+"""Banded (Sakoe-Chiba) Dynamic Time Warping in pure JAX.
+
+Paper Eqs. 1-2 with the warping-window constraint ``|i - j| <= w``
+(SS II-A).  We minimise ``D(L, L)`` directly — squared-cost, no sqrt.
+
+TPU adaptation (DESIGN.md SS3): the DP recurrence has an intra-row sequential
+dependency (``D(i, j)`` needs ``D(i, j-1)``), so rows cannot be vectorised.
+Cells on one *anti-diagonal* ``d = i + j`` depend only on diagonals ``d-1``
+and ``d-2``, so we scan over the ``2L - 1`` anti-diagonals and vectorise each
+diagonal across the VPU.  Work is O(L^2) elementwise ops (band-masked), state
+is O(L).  The Pallas kernel (kernels/dtw_band.py) additionally packs a batch
+of (query, candidate) pairs across vector lanes.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+Array = jax.Array
+
+_INF = jnp.inf
+
+
+@functools.partial(jax.jit, static_argnames=("w",))
+def dtw(a: Array, b: Array, w: int | None = None) -> Array:
+    """``DTW_w(a, b)`` for two equal-length 1-D series (squared cost).
+
+    Args:
+      a, b: ``(L,)`` series.
+      w: Sakoe-Chiba half-width; ``None`` or ``>= L`` means unconstrained.
+         ``w == 0`` is the squared Euclidean distance.
+
+    Returns:
+      Scalar ``D(L, L)``.
+    """
+    L = a.shape[-1]
+    if w is None or w >= L:
+        w = L
+    ii = jnp.arange(L)
+
+    def step(carry, d):
+        d1, d2 = carry  # diagonals d-1, d-2; index i holds D(i, d-i)
+        jj = d - ii
+        bj = b[jnp.clip(jj, 0, L - 1)]
+        cost = (a - bj) ** 2
+        up = d1                                        # D(i, j-1)
+        left = jnp.concatenate([jnp.full((1,), _INF, d1.dtype), d1[:-1]])   # D(i-1, j)
+        diag = jnp.concatenate([jnp.full((1,), _INF, d2.dtype), d2[:-1]])   # D(i-1, j-1)
+        best = jnp.minimum(jnp.minimum(up, left), diag)
+        best = jnp.where((ii == 0) & (jj == 0), 0.0, best)
+        nd = cost + best
+        valid = (jj >= 0) & (jj < L) & (jnp.abs(ii - jj) <= w)
+        nd = jnp.where(valid, nd, _INF)
+        return (nd, d1), None
+
+    init = (jnp.full((L,), _INF, a.dtype), jnp.full((L,), _INF, a.dtype))
+    (dlast, _), _ = lax.scan(step, init, jnp.arange(2 * L - 1))
+    return dlast[L - 1]
+
+
+@functools.partial(jax.jit, static_argnames=("w",))
+def dtw_batch(a: Array, b: Array, w: int | None = None) -> Array:
+    """Batched ``DTW_w`` over leading axes: ``(..., L) x (..., L) -> (...)``."""
+    fn = dtw
+    for _ in range(max(a.ndim, b.ndim) - 1):
+        fn = jax.vmap(fn, in_axes=(0, 0, None))
+    return fn(a, b, w)
+
+
+def dtw_pairs(q: Array, c: Array, w: int | None = None) -> Array:
+    """All-pairs ``DTW_w``: ``(Q, L) x (C, L) -> (Q, C)``.
+
+    This is the expensive verification step the lower-bound cascade exists to
+    avoid; the engine only calls it on cascade survivors.
+    """
+    per_q = jax.vmap(dtw, in_axes=(None, 0, None))     # (C,)
+    return jax.vmap(per_q, in_axes=(0, None, None))(q, c, w)
+
+
+def cost_matrix(a: Array, b: Array, w: int | None = None) -> Array:
+    """Full DP matrix ``D`` (O(L^2) memory) — debugging / figures only."""
+    L = a.shape[-1]
+    if w is None or w >= L:
+        w = L
+    delta = (a[:, None] - b[None, :]) ** 2
+    band = jnp.abs(jnp.arange(L)[:, None] - jnp.arange(L)[None, :]) <= w
+    delta = jnp.where(band, delta, _INF)
+
+    def row_step(prev_row, xs):
+        drow, i = xs
+
+        def col_step(left_val, xs2):
+            dij, up, diag_ = xs2
+            best = jnp.minimum(jnp.minimum(left_val, up), diag_)
+            val = dij + best
+            return val, val
+
+        diag_prev = jnp.concatenate(
+            [jnp.where(i == 0, 0.0, _INF)[None], prev_row[:-1]]
+        )
+        _, row = lax.scan(col_step, _INF, (drow, prev_row, diag_prev))
+        return row, row
+
+    init = jnp.full((L,), _INF)
+    _, rows = lax.scan(row_step, init, (delta, jnp.arange(L)))
+    return rows
+
+
+def dtw_envelope_bound_gap(a: Array, b: Array, lb: Array, w: int | None = None) -> Array:
+    """Tightness ``lb / DTW_w(a, b)`` (paper Eq. 15) for diagnostics."""
+    d = dtw(a, b, w)
+    return jnp.where(d > 0, lb / d, 1.0)

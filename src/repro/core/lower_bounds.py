@@ -1,0 +1,313 @@
+"""DTW lower bounds: LB_KIM, LB_YI, LB_KEOGH, LB_IMPROVED, LB_NEW and the
+paper's contribution LB_ENHANCED^V (Tan, Petitjean & Webb 2018).
+
+Conventions (match SS II-A of the paper):
+  * per-link cost ``delta(a, b) = (a - b)^2`` — all bounds lower-bound the
+    *squared-cost* ``D(L, L)``, the quantity NN-DTW compares.
+  * ``w`` is the Sakoe-Chiba half-width, ``0 <= w <= L``; every bound below
+    is valid for ``DTW_w`` for any ``w`` (a constrained path set can only
+    raise the DTW value).
+  * All series are 1-D ``(L,)`` in the per-pair API; ``*_matrix`` variants
+    compute ``(Q, C)`` blocks for the batched cascade (DESIGN.md SS3).
+
+All bounds are branch-free (clamped-difference algebra instead of the
+paper's per-element ``if``), which is what makes them vectorise on the VPU.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.distances import delta
+from repro.core.envelopes import envelope
+
+Array = jax.Array
+
+_INF = jnp.inf
+
+
+# ---------------------------------------------------------------------------
+# LB_KIM (paper SS II-B.1, Eq. 3, with the paper's "sum of features" variant)
+# ---------------------------------------------------------------------------
+
+def _interior(idx: Array, L: int) -> Array:
+    return (idx != 0) & (idx != L - 1)
+
+
+def lb_kim(a: Array, b: Array) -> Array:
+    """Provably-safe O(1)-feature Kim bound (cascade tier 0).
+
+    ``delta(a_1, b_1) + delta(a_L, b_L) + max(t_max, t_min)`` where the
+    max/min feature terms are only admitted when their witness index is
+    interior (so the witnessed link is distinct from the boundary links),
+    and we take the *max* of the two feature terms rather than the paper's
+    sum, because a single link can witness both features at once (e.g. A's
+    argmax aligned to B's argmin).  See tests/test_lower_bounds.py for the
+    counterexample that breaks the naive sum.
+    """
+    L = a.shape[-1]
+    res = delta(a[..., 0], b[..., 0]) + delta(a[..., -1], b[..., -1])
+    amax, bmax = jnp.max(a, -1), jnp.max(b, -1)
+    amin, bmin = jnp.min(a, -1), jnp.min(b, -1)
+    # witness = the series whose extremum is more extreme
+    ia = jnp.where(amax >= bmax, jnp.argmax(a, -1), jnp.argmax(b, -1))
+    t_max = jnp.where(_interior(ia, L), delta(amax, bmax), 0.0)
+    im = jnp.where(amin <= bmin, jnp.argmin(a, -1), jnp.argmin(b, -1))
+    t_min = jnp.where(_interior(im, L), delta(amin, bmin), 0.0)
+    return res + jnp.maximum(t_max, t_min)
+
+
+def lb_kim_paper(a: Array, b: Array) -> Array:
+    """The paper's experimental LB_KIM variant (SS IV): sum of the four
+    features, dropping the max/min features when that point is first/last.
+
+    Soundness note: summing both extremum features relies on the witness
+    links being distinct, which the first/last exclusion does not obviously
+    guarantee.  We could not prove it, but an adversarial search (40k random
+    pairs + exhaustive small value grids — see tests) found no violation,
+    so it appears sound in practice.  The engine still uses the provably
+    safe ``lb_kim`` (max instead of sum under possible collision).
+    """
+    L = a.shape[-1]
+    res = delta(a[..., 0], b[..., 0]) + delta(a[..., -1], b[..., -1])
+    ok_max = _interior(jnp.argmax(a, -1), L) & _interior(jnp.argmax(b, -1), L)
+    ok_min = _interior(jnp.argmin(a, -1), L) & _interior(jnp.argmin(b, -1), L)
+    res += jnp.where(ok_max, delta(jnp.max(a, -1), jnp.max(b, -1)), 0.0)
+    res += jnp.where(ok_min, delta(jnp.min(a, -1), jnp.min(b, -1)), 0.0)
+    return res
+
+
+# ---------------------------------------------------------------------------
+# LB_YI (paper SS II-B.2, Eq. 4)
+# ---------------------------------------------------------------------------
+
+def lb_yi(a: Array, b: Array) -> Array:
+    bmax = jnp.max(b, -1, keepdims=True)
+    bmin = jnp.min(b, -1, keepdims=True)
+    over = jnp.maximum(a - bmax, 0.0)
+    under = jnp.maximum(bmin - a, 0.0)
+    return jnp.sum(over * over + under * under, axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# LB_KEOGH (paper SS II-B.3, Eqs. 5-7)
+# ---------------------------------------------------------------------------
+
+def lb_keogh_env(a: Array, u: Array, lo: Array) -> Array:
+    """LB_KEOGH given the candidate's precomputed envelope ``(u, lo)``."""
+    over = jnp.maximum(a - u, 0.0)
+    under = jnp.maximum(lo - a, 0.0)
+    return jnp.sum(over * over + under * under, axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("w",))
+def lb_keogh(a: Array, b: Array, w: int) -> Array:
+    u, lo = envelope(b, w)
+    return lb_keogh_env(a, u, lo)
+
+
+def lb_keogh_matrix(q: Array, u: Array, lo: Array) -> Array:
+    """``(Q, L) x (C, L)-envelopes -> (Q, C)`` Keogh block (VPU-bound)."""
+    over = jnp.maximum(q[:, None, :] - u[None, :, :], 0.0)
+    under = jnp.maximum(lo[None, :, :] - q[:, None, :], 0.0)
+    return jnp.sum(over * over + under * under, axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# LB_IMPROVED (paper SS II-B.4, Eqs. 8-9)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("w",))
+def lb_improved(a: Array, b: Array, w: int) -> Array:
+    u, lo = envelope(b, w)
+    first = lb_keogh_env(a, u, lo)
+    a_proj = jnp.clip(a, lo, u)                       # Eq. 8
+    up, lp = envelope(a_proj, w)
+    second = lb_keogh_env(b, up, lp)
+    return first + second
+
+
+# ---------------------------------------------------------------------------
+# LB_NEW (paper SS II-B.5, Eq. 10)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("w",))
+def lb_new(a: Array, b: Array, w: int) -> Array:
+    """Boundary terms + exact windowed point-set minima for interior i.
+
+    O(L*W) as a dense gather+reduce — on the VPU this beats the paper's
+    O(L log W) tree lookups (data-dependent) by a wide margin.
+    """
+    L = a.shape[-1]
+    w = min(w, L)
+    res = delta(a[0], b[0]) + delta(a[-1], b[-1])
+    ii = jnp.arange(L)[:, None]
+    off = jnp.arange(-w, w + 1)[None, :]
+    jj = ii + off
+    valid = (jj >= 0) & (jj < L)
+    vals = b[jnp.clip(jj, 0, L - 1)]                  # (L, 2w+1)
+    d = delta(a[:, None], vals)
+    d = jnp.where(valid, d, _INF)
+    per_i = jnp.min(d, axis=-1)                       # (L,)
+    interior = jnp.sum(per_i[1:-1])
+    return res + interior
+
+
+# ---------------------------------------------------------------------------
+# LB_ENHANCED^V (the paper's contribution: SS III, Eq. 14 / Algorithm 1)
+# ---------------------------------------------------------------------------
+
+def _n_bands(L: int, w: int, v: int) -> int:
+    """Algorithm 1 line 2: number of left/right elastic bands to use."""
+    return max(0, min(L // 2, w, v))
+
+
+def _band_minima(a: Array, b: Array, nb: int) -> Array:
+    """Sum of per-band minima for the ``nb`` leftmost left bands and ``nb``
+    rightmost right bands (paper Eqs. 11-12).
+
+    Band ``i < nb <= w`` is L-shaped: cells ``delta(a_j, b_i)`` and
+    ``delta(a_i, b_k)`` for ``j, k in [0, i]`` (left; window clamp is at the
+    series start because ``i < w``), mirrored for the right end.  Arm width
+    is ``i + 1 <= nb``, so the whole gather is an ``(nb, nb)`` block — this
+    smallness is exactly why the bands are tight *and* cheap (SS III).
+    """
+    if nb == 0:
+        return jnp.zeros(a.shape[:-1], a.dtype)
+    L = a.shape[-1]
+    i = jnp.arange(nb)[:, None]                       # band index
+    t = jnp.arange(nb)[None, :]                       # offset along the arm
+    mask = t <= i
+    jl = jnp.clip(i - t, 0, L - 1)                    # left-band arm indices
+    left1 = delta(_take(a, jl), _take(b, i))
+    left2 = delta(_take(a, i), _take(b, jl))
+    left = jnp.where(mask, jnp.minimum(left1, left2), _INF)
+    jr = jnp.clip((L - 1 - i) + t, 0, L - 1)          # right-band arm indices
+    ir = L - 1 - i
+    right1 = delta(_take(a, jr), _take(b, ir))
+    right2 = delta(_take(a, ir), _take(b, jr))
+    right = jnp.where(mask, jnp.minimum(right1, right2), _INF)
+    return jnp.sum(jnp.min(left, axis=-1), axis=-1) + jnp.sum(
+        jnp.min(right, axis=-1), axis=-1
+    )
+
+
+def _take(x: Array, idx: Array) -> Array:
+    """Gather along the last axis with broadcasting-friendly semantics."""
+    return jnp.take(x, idx, axis=-1) if x.ndim == 1 else x[..., idx]
+
+
+@functools.partial(jax.jit, static_argnames=("w", "v"))
+def lb_enhanced_bands(a: Array, b: Array, w: int, v: int) -> Array:
+    """Bands-only partial bound — Algorithm 1 lines 1-11.
+
+    This is itself a valid lower bound and forms its own cascade tier: the
+    paper's early-abandon test (line 12) becomes tier-level batch compaction
+    on TPU (DESIGN.md SS3).
+    """
+    L = a.shape[-1]
+    return _band_minima(a, b, _n_bands(L, w, v))
+
+
+@functools.partial(jax.jit, static_argnames=("w", "v"))
+def lb_enhanced(a: Array, b: Array, w: int, v: int) -> Array:
+    """LB_ENHANCED^V (Eq. 14 with Algorithm 1's ``n_bands`` clamp)."""
+    u, lo = envelope(b, w)
+    return lb_enhanced_env(a, b, u, lo, w, v)
+
+
+def lb_enhanced_env(a: Array, b: Array, u: Array, lo: Array, w: int, v: int) -> Array:
+    """LB_ENHANCED^V with a precomputed candidate envelope."""
+    L = a.shape[-1]
+    nb = _n_bands(L, w, v)
+    bands = _band_minima(a, b, nb)
+    # Keogh bridge over i in [nb, L - nb)
+    sl = slice(nb, L - nb)
+    over = jnp.maximum(a[..., sl] - u[..., sl], 0.0)
+    under = jnp.maximum(lo[..., sl] - a[..., sl], 0.0)
+    bridge = jnp.sum(over * over + under * under, axis=-1)
+    return bands + bridge
+
+
+def lb_enhanced_matrix(
+    q: Array, c: Array, u: Array, lo: Array, w: int, v: int
+) -> Array:
+    """``(Q, L) x (C, L) -> (Q, C)`` LB_ENHANCED block for the cascade.
+
+    Bands cost O(Q*C*nb^2) on an ``(nb, nb)`` gather block; the bridge is the
+    O(Q*C*L) Keogh term.  Callers tile Q and C so the block fits VMEM; the
+    Pallas kernel (kernels/lb_enhanced.py) fuses both parts.
+    """
+    L = q.shape[-1]
+    nb = _n_bands(L, w, v)
+    qe = q[:, None, :]                                # (Q, 1, L)
+    ce = c[None, :, :]                                # (1, C, L)
+    bands = _band_minima_matrix(qe, ce, nb)
+    sl = slice(nb, L - nb)
+    over = jnp.maximum(qe[..., sl] - u[None, :, sl], 0.0)
+    under = jnp.maximum(lo[None, :, sl] - qe[..., sl], 0.0)
+    bridge = jnp.sum(over * over + under * under, axis=-1)
+    return bands + bridge
+
+
+def _band_minima_matrix(qe: Array, ce: Array, nb: int) -> Array:
+    """Broadcasted version of ``_band_minima`` for (Q, 1, L) x (1, C, L)."""
+    if nb == 0:
+        shape = jnp.broadcast_shapes(qe.shape[:-1], ce.shape[:-1])
+        return jnp.zeros(shape, qe.dtype)
+    L = qe.shape[-1]
+    i = jnp.arange(nb)[:, None]
+    t = jnp.arange(nb)[None, :]
+    mask = t <= i
+    jl = jnp.clip(i - t, 0, L - 1)
+    left = jnp.minimum(
+        delta(qe[..., jl], ce[..., i]), delta(qe[..., i], ce[..., jl])
+    )
+    left = jnp.where(mask, left, _INF)
+    ir = L - 1 - i
+    jr = jnp.clip(ir + t, 0, L - 1)
+    right = jnp.minimum(
+        delta(qe[..., jr], ce[..., ir]), delta(qe[..., ir], ce[..., jr])
+    )
+    right = jnp.where(mask, right, _INF)
+    return jnp.sum(jnp.min(left, -1), -1) + jnp.sum(jnp.min(right, -1), -1)
+
+
+# ---------------------------------------------------------------------------
+# Registry (benchmarks & engine tiers select bounds by name)
+# ---------------------------------------------------------------------------
+
+def get_bound(name: str, w: int, v: int = 4):
+    """Return a ``fn(a, b) -> scalar`` closure for a named bound."""
+    name = name.lower()
+    if name == "lb_kim":
+        return lb_kim
+    if name == "lb_kim_paper":
+        return lb_kim_paper
+    if name == "lb_yi":
+        return lb_yi
+    if name == "lb_keogh":
+        return lambda a, b: lb_keogh(a, b, w)
+    if name == "lb_improved":
+        return lambda a, b: lb_improved(a, b, w)
+    if name == "lb_new":
+        return lambda a, b: lb_new(a, b, w)
+    if name.startswith("lb_enhanced"):
+        vv = int(name.rsplit("_", 1)[-1]) if name[-1].isdigit() else v
+        return lambda a, b: lb_enhanced(a, b, w, vv)
+    raise ValueError(f"unknown lower bound: {name!r}")
+
+
+BOUND_NAMES = (
+    "lb_kim",
+    "lb_keogh",
+    "lb_improved",
+    "lb_new",
+    "lb_enhanced_1",
+    "lb_enhanced_2",
+    "lb_enhanced_3",
+    "lb_enhanced_4",
+)

@@ -1,0 +1,144 @@
+"""Plain-Python/numpy oracles: direct, loop-based transcriptions of the
+paper's equations.  Slow and unvectorised on purpose — these are the ground
+truth the JAX implementations and Pallas kernels are tested against.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def delta(a: float, b: float) -> float:
+    return float((a - b) ** 2)
+
+
+def dtw(a, b, w=None):
+    """Eq. 1-2 with the Sakoe-Chiba window; returns D(L, L) (squared cost)."""
+    a = np.asarray(a, dtype=np.float64)
+    b = np.asarray(b, dtype=np.float64)
+    L = len(a)
+    if w is None or w >= L:
+        w = L
+    D = np.full((L, L), np.inf)
+    for i in range(L):
+        for j in range(max(0, i - w), min(L, i + w + 1)):
+            c = delta(a[i], b[j])
+            if i == 0 and j == 0:
+                D[i, j] = c
+            else:
+                best = np.inf
+                if i > 0:
+                    best = min(best, D[i - 1, j])
+                if j > 0:
+                    best = min(best, D[i, j - 1])
+                if i > 0 and j > 0:
+                    best = min(best, D[i - 1, j - 1])
+                D[i, j] = c + best
+    return D[L - 1, L - 1]
+
+
+def envelope(b, w):
+    """Eqs. 5-6."""
+    b = np.asarray(b, dtype=np.float64)
+    L = len(b)
+    u = np.empty(L)
+    lo = np.empty(L)
+    for i in range(L):
+        s, e = max(0, i - w), min(L, i + w + 1)
+        u[i] = b[s:e].max()
+        lo[i] = b[s:e].min()
+    return u, lo
+
+
+def lb_keogh(a, b, w):
+    """Eq. 7."""
+    a = np.asarray(a, dtype=np.float64)
+    u, lo = envelope(b, w)
+    res = 0.0
+    for i in range(len(a)):
+        if a[i] > u[i]:
+            res += delta(a[i], u[i])
+        elif a[i] < lo[i]:
+            res += delta(a[i], lo[i])
+    return res
+
+
+def lb_improved(a, b, w):
+    """Eqs. 8-9."""
+    a = np.asarray(a, dtype=np.float64)
+    b = np.asarray(b, dtype=np.float64)
+    u, lo = envelope(b, w)
+    a_proj = np.clip(a, lo, u)
+    return lb_keogh(a, b, w) + lb_keogh(b, a_proj, w)
+
+
+def lb_new(a, b, w):
+    """Eq. 10."""
+    a = np.asarray(a, dtype=np.float64)
+    b = np.asarray(b, dtype=np.float64)
+    L = len(a)
+    w = min(w, L)
+    res = delta(a[0], b[0]) + delta(a[-1], b[-1])
+    for i in range(1, L - 1):
+        s, e = max(0, i - w), min(L, i + w + 1)
+        res += min(delta(a[i], b[j]) for j in range(s, e))
+    return res
+
+
+def lb_yi(a, b):
+    """Eq. 4."""
+    a = np.asarray(a, dtype=np.float64)
+    bmax, bmin = float(np.max(b)), float(np.min(b))
+    res = 0.0
+    for x in a:
+        if x > bmax:
+            res += delta(x, bmax)
+        elif x < bmin:
+            res += delta(x, bmin)
+    return res
+
+
+def lb_enhanced(a, b, w, v):
+    """Algorithm 1 (without the early-abandon cutoff): left/right elastic
+    bands for the ``n_bands`` outermost positions + Keogh bridge."""
+    a = np.asarray(a, dtype=np.float64)
+    b = np.asarray(b, dtype=np.float64)
+    L = len(a)
+    nb = max(0, min(L // 2, w, v))
+    res = 0.0
+    # left bands i = 0 .. nb-1  (1-indexed 1..n_bands in the paper)
+    for i in range(nb):
+        cells = [delta(a[j], b[i]) for j in range(max(0, i - w), i + 1)]
+        cells += [delta(a[i], b[k]) for k in range(max(0, i - w), i + 1)]
+        res += min(cells)
+    # right bands
+    for i in range(L - nb, L):
+        cells = [delta(a[j], b[i]) for j in range(i, min(L, i + w + 1))]
+        cells += [delta(a[i], b[k]) for k in range(i, min(L, i + w + 1))]
+        res += min(cells)
+    # Keogh bridge
+    u, lo = envelope(b, w)
+    for i in range(nb, L - nb):
+        if a[i] > u[i]:
+            res += delta(a[i], u[i])
+        elif a[i] < lo[i]:
+            res += delta(a[i], lo[i])
+    return res
+
+
+def lb_enhanced_bands(a, b, w, v):
+    """Algorithm 1 lines 1-11 (band sum only)."""
+    a = np.asarray(a, dtype=np.float64)
+    b = np.asarray(b, dtype=np.float64)
+    L = len(a)
+    nb = max(0, min(L // 2, w, v))
+    res = 0.0
+    for i in range(nb):
+        cells = [delta(a[j], b[i]) for j in range(max(0, i - w), i + 1)]
+        cells += [delta(a[i], b[k]) for k in range(max(0, i - w), i + 1)]
+        res += min(cells)
+    for i in range(L - nb, L):
+        cells = [delta(a[j], b[i]) for j in range(i, min(L, i + w + 1))]
+        cells += [delta(a[i], b[k]) for k in range(i, min(L, i + w + 1))]
+        res += min(cells)
+    return res

@@ -1,0 +1,5 @@
+"""Data substrate: synthetic UCR-like series + LM token pipeline."""
+
+from repro.data.synthetic import Dataset, make_dataset, random_pairs
+
+__all__ = ["Dataset", "make_dataset", "random_pairs"]

@@ -1,0 +1,26 @@
+"""Distribution substrate: sharding rules, compression, elasticity."""
+
+from repro.distributed.compression import CompressionConfig, compress_grads
+from repro.distributed.elastic import Heartbeat, MeshPlan, plan_mesh
+from repro.distributed.sharding import (
+    AxisRules,
+    activation_spec,
+    batch_specs,
+    cache_shardings,
+    param_shardings,
+    param_spec,
+)
+
+__all__ = [
+    "AxisRules",
+    "CompressionConfig",
+    "Heartbeat",
+    "MeshPlan",
+    "activation_spec",
+    "batch_specs",
+    "cache_shardings",
+    "compress_grads",
+    "param_shardings",
+    "param_spec",
+    "plan_mesh",
+]

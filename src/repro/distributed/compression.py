@@ -1,0 +1,60 @@
+"""Gradient compression with error feedback (distributed-optimization trick).
+
+int8 per-tensor-scaled quantisation applied to gradients before the
+cross-replica reduction, with local error feedback so the quantisation
+noise is unbiased over steps (1-bit-Adam/EF-SGD family).  On a real pod the
+quantised tensors are what crosses the DCI between pods — a 4x wire saving
+on the inter-pod all-reduce; error feedback keeps convergence intact.
+
+The hook is numerically honest on CPU too (tests assert the error-feedback
+invariant: compressed + error == original).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressionConfig:
+    bits: int = 8
+    error_feedback: bool = True
+    min_size: int = 4096    # don't quantise small leaves (norms, biases)
+
+
+def _quantize(g: Array, bits: int) -> Array:
+    """Fake-quantise to ``bits`` with per-tensor symmetric scale."""
+    qmax = 2.0 ** (bits - 1) - 1
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / qmax
+    q = jnp.round(g / scale)
+    q = jnp.clip(q, -qmax, qmax)
+    return q * scale
+
+
+def compress_grads(
+    grads: Any, err: Any | None, cfg: CompressionConfig
+) -> tuple[Any, Any | None]:
+    """Returns (compressed grads, new error state)."""
+
+    def one(g, e):
+        g32 = g.astype(jnp.float32)
+        if g.size < cfg.min_size:
+            return g32, jnp.zeros_like(g32)
+        target = g32 + (e if e is not None else 0.0)
+        q = _quantize(target, cfg.bits)
+        return q, target - q
+
+    if err is None:
+        outs = jax.tree.map(lambda g: one(g, None), grads)
+    else:
+        outs = jax.tree.map(one, grads, err)
+    flat, tdef = jax.tree.flatten(outs, is_leaf=lambda x: isinstance(x, tuple))
+    comp = jax.tree.unflatten(tdef, [f[0] for f in flat])
+    new_err = jax.tree.unflatten(tdef, [f[1] for f in flat])
+    return comp, (new_err if cfg.error_feedback else None)

@@ -1,0 +1,72 @@
+"""Elastic scaling + straggler mitigation policy.
+
+``plan_mesh`` re-derives a (data, model)[, pod] mesh for whatever device
+count survives a failure; together with checkpoint.restore's
+reshard-on-restore this is the restart path: lose a host -> relaunch with
+the surviving device set -> same checkpoint, new mesh, training continues.
+The model axis is kept at the largest divisor <= preferred_tp that divides
+the device count, because TP size changes activation sharding but never
+numerics.
+
+``Heartbeat`` is the straggler/liveness primitive the launcher monitors:
+each host touches its file every step; the monitor evicts hosts whose
+heartbeat age exceeds the deadline (on CPU we exercise the file protocol,
+not the eviction RPC).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+
+import jax
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshPlan:
+    shape: tuple[int, ...]
+    axes: tuple[str, ...]
+
+
+def plan_mesh(
+    n_devices: int,
+    *,
+    preferred_tp: int = 16,
+    pods: int = 1,
+) -> MeshPlan:
+    """Choose mesh factors for an arbitrary surviving device count."""
+    per_pod = n_devices // pods
+    tp = preferred_tp
+    while tp > 1 and per_pod % tp:
+        tp //= 2
+    data = per_pod // tp
+    if pods > 1:
+        return MeshPlan((pods, data, tp), ("pod", "data", "model"))
+    return MeshPlan((data, tp), ("data", "model"))
+
+
+@dataclasses.dataclass
+class Heartbeat:
+    """Per-host liveness file; the launcher monitors heartbeat age."""
+
+    path: str
+    host_id: int = 0
+
+    def beat(self, step: int) -> None:
+        tmp = f"{self.path}.tmp"
+        with open(tmp, "w") as f:
+            json.dump({"host": self.host_id, "step": step, "t": time.time()}, f)
+        os.replace(tmp, self.path)
+
+    def age(self) -> float | None:
+        try:
+            with open(self.path) as f:
+                return time.time() - json.load(f)["t"]
+        except (FileNotFoundError, json.JSONDecodeError):
+            return None
+
+    def is_straggler(self, deadline_s: float) -> bool:
+        age = self.age()
+        return age is None or age > deadline_s

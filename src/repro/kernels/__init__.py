@@ -1,0 +1,34 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+The paper optimises exactly one thing — the per-pair cost of lower-bounded
+NN-DTW search — so the kernels here cover that pipeline end to end:
+
+  * envelope.py        — Sakoe-Chiba envelopes (Eqs. 5-6), prefix-doubling
+  * lb_keogh.py        — batched LB_KEOGH blocks (Eq. 7)
+  * lb_enhanced.py     — fused elastic-band + bridge LB_ENHANCED^V (Eq. 14)
+  * dtw_band.py        — banded DTW verification, lane-parallel wavefront
+  * mamba_scan.py      — fused Mamba selective scan (substrate hot-spot)
+  * flash_attention.py — fused attention forward (substrate hot-spot)
+
+``ops.py`` holds the jitted public wrappers (interpret=True on CPU,
+custom-vjp training wrappers for the fused kernels); ``ref.py`` the
+pure-jnp oracles the tests sweep against.
+"""
+
+from repro.kernels.ops import (
+    dtw_band_op,
+    envelope_op,
+    flash_attention_op,
+    lb_enhanced_op,
+    lb_keogh_op,
+    mamba_scan_op,
+)
+
+__all__ = [
+    "dtw_band_op",
+    "envelope_op",
+    "flash_attention_op",
+    "lb_enhanced_op",
+    "lb_keogh_op",
+    "mamba_scan_op",
+]

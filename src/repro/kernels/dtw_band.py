@@ -1,0 +1,101 @@
+"""Pallas TPU kernel: banded DTW, lane-parallel anti-diagonal wavefront.
+
+This is the cascade's expensive verification step (paper Eq. 1-2 with the
+Sakoe-Chiba window).  GPU DTW implementations put one *pair* per thread
+block and wavefront within the matrix; the TPU-native layout is the
+transpose (DESIGN.md SS3): a *batch of pairs* fills the vector lanes and the
+DP sweeps the ``2L - 1`` anti-diagonals sequentially.  Every step is a
+handful of full-width ``(TP, L)`` VPU ops; there is no data-dependent
+control flow anywhere.
+
+Key trick: on anti-diagonal ``d`` the candidate values needed are
+``b[d - i]`` for all ``i`` — a *contiguous, reversed* slice of ``b``.  We
+flip and zero-pad ``b`` once into a ``(TP, 3L)`` scratch so each step is a
+single ``dynamic_slice`` (no gathers; Mosaic-friendly).
+
+State: two diagonal buffers ``(TP, L)``; out-of-band / out-of-range cells
+ride along as +inf.  VMEM: a, b (2 x TP*L) + flipped pad (TP*3L) + 2
+diagonals (2 x TP*L) ~= 7*TP*L f32: TP=128, L=2048 -> 7.3 MB.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+Array = jax.Array
+
+_INF = float(jnp.inf)
+
+
+def _dtw_band_kernel(a_ref, b_ref, out_ref, *, w: int):
+    a = a_ref[...]                                       # (TP, L)
+    b = b_ref[...]
+    tp, L = a.shape
+    dt = a.dtype
+    # b_flip_pad[:, L + t] = b[:, L - 1 - t]
+    zeros = jnp.zeros((tp, L), dt)
+    b_flip = jnp.flip(b, axis=-1)
+    bfp = jnp.concatenate([zeros, b_flip, zeros], axis=-1)  # (TP, 3L)
+    ii = lax.broadcasted_iota(jnp.int32, (tp, L), 1)
+
+    def step(d, carry):
+        d1, d2 = carry                                   # diagonals d-1, d-2
+        # b[d - i] = b_flip[L - 1 - d + i] -> slice of bfp at 2L - 1 - d
+        b_at = lax.dynamic_slice(bfp, (0, 2 * L - 1 - d), (tp, L))
+        diff = a - b_at
+        cost = diff * diff
+        inf_col = jnp.full((tp, 1), _INF, dt)
+        up = d1                                          # D(i, j-1)
+        left = jnp.concatenate([inf_col, d1[:, :-1]], axis=-1)   # D(i-1, j)
+        diag = jnp.concatenate([inf_col, d2[:, :-1]], axis=-1)   # D(i-1, j-1)
+        best = jnp.minimum(jnp.minimum(up, left), diag)
+        jj = d - ii
+        origin = (ii == 0) & (jj == 0)
+        nd = cost + jnp.where(origin, 0.0, best)
+        valid = (jj >= 0) & (jj < L) & (jnp.abs(ii - jj) <= w)
+        nd = jnp.where(valid, nd, _INF)
+        return nd, d1
+
+    init = (jnp.full((tp, L), _INF, dt), jnp.full((tp, L), _INF, dt))
+    dlast, _ = lax.fori_loop(0, 2 * L - 1, step, init)
+    out_ref[...] = dlast[:, L - 1]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("w", "tile_p", "interpret")
+)
+def dtw_band_pallas(
+    a: Array,
+    b: Array,
+    w: int | None = None,
+    *,
+    tile_p: int = 128,
+    interpret: bool = False,
+) -> Array:
+    """Pairwise banded DTW: ``(P, L), (P, L) -> (P,)`` squared-cost values."""
+    P, L = a.shape
+    if w is None or w >= L:
+        w = L
+    tile_p = min(tile_p, P)
+    pp = (-P) % tile_p
+    if pp:
+        a = jnp.pad(a, ((0, pp), (0, 0)))
+        b = jnp.pad(b, ((0, pp), (0, 0)))
+    Pp = P + pp
+    out = pl.pallas_call(
+        functools.partial(_dtw_band_kernel, w=w),
+        grid=(Pp // tile_p,),
+        in_specs=[
+            pl.BlockSpec((tile_p, L), lambda i: (i, 0)),
+            pl.BlockSpec((tile_p, L), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_p,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((Pp,), a.dtype),
+        interpret=interpret,
+    )(a, b)
+    return out[:P]

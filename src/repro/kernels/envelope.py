@@ -1,0 +1,101 @@
+"""Pallas TPU kernel: Sakoe-Chiba window envelopes (paper Eqs. 5-6).
+
+Layout: grid over batch tiles; each program owns a ``(TN, L)`` block of
+series rows in VMEM and produces the matching upper/lower envelope blocks.
+The windowed min/max uses prefix-doubling shifted reductions (log2(W) dense
+vector ops) — the TPU-native replacement for Lemire's deque (DESIGN.md SS3).
+
+VMEM budget: 3 blocks of (TN, L) f32.  With TN=8 and L=65536 that is 6 MB,
+comfortably inside the ~16 MB/core VMEM of a v5e.  Longer series fall back
+to the jnp path in ops.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+Array = jax.Array
+
+_NEG = float(-jnp.inf)
+_POS = float(jnp.inf)
+
+
+def _shift_left(x: Array, s: int, fill: float) -> Array:
+    if s == 0:
+        return x
+    pad = jnp.full(x.shape[:-1] + (s,), fill, dtype=x.dtype)
+    return jnp.concatenate([x[..., s:], pad], axis=-1)
+
+
+def _shift_right(x: Array, s: int, fill: float) -> Array:
+    if s == 0:
+        return x
+    pad = jnp.full(x.shape[:-1] + (s,), fill, dtype=x.dtype)
+    return jnp.concatenate([pad, x[..., :-s]], axis=-1)
+
+
+def _sliding(x: Array, k: int, op, fill: float, shift) -> Array:
+    """op-reduce over windows of size ``k`` ending (shift=_shift_right) or
+    starting (shift=_shift_left) at each position, clipped at the edges."""
+    m = x
+    p = 1
+    while p * 2 <= k:
+        m = op(m, shift(m, p, fill))
+        p *= 2
+    if p < k:
+        m = op(m, shift(m, k - p, fill))
+    return m
+
+
+def _envelope_kernel(b_ref, u_ref, l_ref, *, w: int):
+    b = b_ref[...]
+    if w == 0:
+        u_ref[...] = b
+        l_ref[...] = b
+        return
+    # two one-sided windows of size w+1 overlap at i and cover [i-w, i+w];
+    # min/max are idempotent so the overlap is harmless.
+    k = w + 1
+    u_fwd = _sliding(b, k, jnp.maximum, _NEG, _shift_left)
+    u_bwd = _sliding(b, k, jnp.maximum, _NEG, _shift_right)
+    u_ref[...] = jnp.maximum(u_fwd, u_bwd)
+    l_fwd = _sliding(b, k, jnp.minimum, _POS, _shift_left)
+    l_bwd = _sliding(b, k, jnp.minimum, _POS, _shift_right)
+    l_ref[...] = jnp.minimum(l_fwd, l_bwd)
+
+
+@functools.partial(jax.jit, static_argnames=("w", "tile_n", "interpret"))
+def envelope_pallas(
+    b: Array, w: int, *, tile_n: int = 8, interpret: bool = False
+) -> tuple[Array, Array]:
+    """Batched envelopes: ``(N, L) -> ((N, L) upper, (N, L) lower)``.
+
+    Note the window-centering subtlety: ``_shift_right`` by ``w`` then a
+    forward sliding window of ``2w + 1`` reproduces the two-sided window
+    ``[i - w, i + w]`` with correct clipping at both series ends, entirely
+    with static shifts (no gathers — Mosaic-friendly).
+    """
+    n, L = b.shape
+    tile_n = min(tile_n, n)
+    pad_n = (-n) % tile_n
+    if pad_n:
+        b = jnp.pad(b, ((0, pad_n), (0, 0)))
+    np_, _ = b.shape
+    grid = (np_ // tile_n,)
+    spec = pl.BlockSpec((tile_n, L), lambda i: (i, 0))
+    u, lo = pl.pallas_call(
+        functools.partial(_envelope_kernel, w=min(w, L)),
+        grid=grid,
+        in_specs=[spec],
+        out_specs=[spec, spec],
+        out_shape=[
+            jax.ShapeDtypeStruct((np_, L), b.dtype),
+            jax.ShapeDtypeStruct((np_, L), b.dtype),
+        ],
+        interpret=interpret,
+    )(b)
+    return u[:n], lo[:n]

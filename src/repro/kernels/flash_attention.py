@@ -1,0 +1,179 @@
+"""Pallas TPU kernel: flash-attention forward (fused online softmax).
+
+The dominant roofline term for every dense train/prefill cell is the
+unfused attention pipeline: XLA materialises f32 score/probability tensors
+in HBM several times per layer (EXPERIMENTS.md SSRoofline).  This kernel
+keeps the (TQ, TK) score tile and the online-softmax state (m, l, acc) in
+VMEM across the KV grid steps, so HBM traffic collapses to q/k/v/out.
+
+Layout: grid (B*Hkv, Sq/TQ, Skv/TK) — KV tiles innermost (sequential),
+carrying (acc, m, l) in VMEM scratch; GQA handled by folding the q-head
+group into the q tile row dimension.  Causal/window masking is computed
+from iota against the absolute tile offsets, and fully-masked tiles are
+skipped via ``pl.when`` (the causal-wedge skip gives the 2x).
+
+Forward-only (serving/prefill use it directly; training wraps it in
+``jax.custom_vjp`` with the chunked-jnp backward — see ops.py note).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+
+_NEG = -2.3819763e38
+
+
+def _flash_fwd_kernel(
+    q_ref,      # (1, TQ*G, D)   queries (g folded into rows)
+    k_ref,      # (1, TK, D)
+    v_ref,      # (1, TK, D)
+    o_ref,      # (1, TQ*G, D)
+    acc_ref,    # (TQ*G, D) f32 scratch
+    m_ref,      # (TQ*G, 1) f32 scratch
+    l_ref,      # (TQ*G, 1) f32 scratch
+    *,
+    tq: int,
+    tk: int,
+    g: int,
+    scale: float,
+    causal: bool,
+    window: int | None,
+    score_cap: float | None,
+    n_k: int,
+    sq_total: int,
+    skv_total: int,
+):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, _NEG)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q0 = qi * tq                      # absolute first query position
+    k0 = ki * tk
+
+    # skip tiles that are entirely masked by causality / window
+    run = None
+    if causal:
+        run = k0 <= q0 + tq - 1       # some key <= some query
+    if window is not None:
+        w_ok = k0 + tk - 1 >= q0 - (window - 1)
+        run = w_ok if run is None else jnp.logical_and(run, w_ok)
+    if run is None:
+        run = jnp.bool_(True)
+
+    @pl.when(run)
+    def _tile():
+        q = q_ref[0].astype(jnp.float32) * scale          # (TQ*G, D)
+        k = k_ref[0].astype(jnp.float32)                  # (TK, D)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )                                                  # (TQ*G, TK)
+        if score_cap is not None:
+            s = score_cap * jnp.tanh(s / score_cap)
+        rows = lax.broadcasted_iota(jnp.int32, (tq * g, tk), 0) // g + q0
+        cols = lax.broadcasted_iota(jnp.int32, (tq * g, tk), 1) + k0
+        ok = cols < skv_total
+        dp = rows - cols
+        if causal:
+            ok = jnp.logical_and(ok, dp >= 0)
+        if window is not None:
+            ok = jnp.logical_and(ok, dp < window)
+        s = jnp.where(ok, s, _NEG)
+        m_prev = m_ref[...]                                # (TQ*G, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)                             # (TQ*G, TK)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        m_ref[...] = m_new
+
+    @pl.when(ki == n_k - 1)
+    def _emit():
+        o_ref[0] = (
+            acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+        ).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "score_cap", "tile_q", "tile_k",
+                     "interpret"),
+)
+def flash_attention_pallas(
+    q: Array,           # (B, Sq, Hq, D)
+    k: Array,           # (B, Skv, Hkv, D)
+    v: Array,           # (B, Skv, Hkv, D)
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    score_cap: float | None = None,
+    tile_q: int = 128,
+    tile_k: int = 128,
+    interpret: bool = False,
+) -> Array:
+    """Fused attention forward.  Returns (B, Sq, Hq, D).
+
+    Positions are implicit (q row i attends kv rows <= i); ragged caches
+    should mask via Skv truncation before the call.
+    """
+    B, Sq, Hq, D = q.shape
+    _, Skv, Hkv, _ = k.shape
+    g = Hq // Hkv
+    scale = D ** -0.5
+    tile_q = min(tile_q, Sq)
+    tile_k = min(tile_k, Skv)
+    pq, pk = (-Sq) % tile_q, (-Skv) % tile_k
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+    Sqp, Skp = Sq + pq, Skv + pk
+    # fold: (B, Sq, Hkv, g, D) -> (B*Hkv, Sq*g, D) rows grouped by query
+    qf = q.reshape(B, Sqp, Hkv, g, D).transpose(0, 2, 1, 3, 4)
+    qf = qf.reshape(B * Hkv, Sqp * g, D)
+    kf = k.transpose(0, 2, 1, 3).reshape(B * Hkv, Skp, D)
+    vf = v.transpose(0, 2, 1, 3).reshape(B * Hkv, Skp, D)
+    n_k = Skp // tile_k
+
+    out = pl.pallas_call(
+        functools.partial(
+            _flash_fwd_kernel,
+            tq=tile_q, tk=tile_k, g=g, scale=scale, causal=causal,
+            window=window, score_cap=score_cap, n_k=n_k,
+            sq_total=Sq, skv_total=Skv,
+        ),
+        grid=(B * Hkv, Sqp // tile_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, tile_q * g, D), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, tile_k, D), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, tile_k, D), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, tile_q * g, D), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * Hkv, Sqp * g, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((tile_q * g, D), jnp.float32),
+            pltpu.VMEM((tile_q * g, 1), jnp.float32),
+            pltpu.VMEM((tile_q * g, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    out = out.reshape(B, Hkv, Sqp, g, D).transpose(0, 2, 1, 3, 4)
+    return out.reshape(B, Sqp, Hq, D)[:, :Sq]

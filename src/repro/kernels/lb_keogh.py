@@ -1,0 +1,82 @@
+"""Pallas TPU kernel: batched LB_KEOGH blocks (paper Eq. 7).
+
+Computes the ``(Q, C)`` matrix of Keogh bounds between a tile of queries and
+a tile of candidate envelopes.  This is the cascade's O(L) tier and the
+workhorse the paper's Fig. 1 timings are dominated by.
+
+Layout: grid ``(Q/TQ, C/TC)``; each program holds ``q`` ``(TQ, L)`` and the
+envelope blocks ``(TC, L)`` in VMEM and loops over the TQ query rows,
+emitting one ``(TC,)`` row of bounds per iteration.  The inner body is pure
+clamped-difference VPU math (branch-free version of the paper's
+``if A_i > U_i``).  The workload has no inner product structure, so the MXU
+is idle by construction — this tier is VPU/VMEM-bandwidth-bound, which the
+roofline analysis in EXPERIMENTS.md quantifies.
+
+VMEM: (TQ + 2*TC + TQ*TC/L) rows of L f32. TQ=8, TC=128, L=4096 -> ~4.3 MB.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+
+Array = jax.Array
+
+
+def _lb_keogh_kernel(q_ref, u_ref, l_ref, out_ref):
+    u = u_ref[...]            # (TC, L)
+    lo = l_ref[...]           # (TC, L)
+    tq = q_ref.shape[0]
+
+    def row(i, _):
+        qi = q_ref[i, :][None, :]                       # (1, L)
+        over = jnp.maximum(qi - u, 0.0)
+        under = jnp.maximum(lo - qi, 0.0)
+        out_ref[i, :] = jnp.sum(over * over + under * under, axis=-1)
+        return 0
+
+    lax.fori_loop(0, tq, row, 0, unroll=True)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("tile_q", "tile_c", "interpret")
+)
+def lb_keogh_pallas(
+    q: Array,
+    u: Array,
+    lo: Array,
+    *,
+    tile_q: int = 8,
+    tile_c: int = 128,
+    interpret: bool = False,
+) -> Array:
+    """``(Q, L) x (C, L) envelopes -> (Q, C)`` LB_KEOGH matrix."""
+    Q, L = q.shape
+    C, _ = u.shape
+    tile_q = min(tile_q, Q)
+    tile_c = min(tile_c, C)
+    pq, pc = (-Q) % tile_q, (-C) % tile_c
+    if pq:
+        q = jnp.pad(q, ((0, pq), (0, 0)))
+    if pc:
+        # pad candidates with an infinitely-wide envelope -> bound 0
+        u = jnp.pad(u, ((0, pc), (0, 0)), constant_values=jnp.inf)
+        lo = jnp.pad(lo, ((0, pc), (0, 0)), constant_values=-jnp.inf)
+    Qp, Cp = Q + pq, C + pc
+    out = pl.pallas_call(
+        _lb_keogh_kernel,
+        grid=(Qp // tile_q, Cp // tile_c),
+        in_specs=[
+            pl.BlockSpec((tile_q, L), lambda i, j: (i, 0)),
+            pl.BlockSpec((tile_c, L), lambda i, j: (j, 0)),
+            pl.BlockSpec((tile_c, L), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_q, tile_c), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Qp, Cp), q.dtype),
+        interpret=interpret,
+    )(q, u, lo)
+    return out[:Q, :C]

@@ -1,0 +1,147 @@
+"""Pallas TPU kernel: fused Mamba-1 selective scan.
+
+The XLA lowering of the chunked selective scan materialises every
+associative-scan level as an HBM round trip — the dominant roofline term
+for the SSM archs (EXPERIMENTS.md SSRoofline).  This kernel is the TPU
+analogue of Mamba's "hardware-aware" CUDA scan: the recurrence state
+``h (C_tile, N)`` lives in a VMEM scratch for the whole sequence, so HBM
+traffic collapses to exactly the kernel's inputs and outputs:
+
+    bytes = B*S*(2C + 2N)*in_bytes + B*S*C*out_bytes   (+ tiny h0/hT)
+
+vs O(log(chunk) * B*S*C*N) for the XLA scan — a ~60x reduction at
+falcon-mamba shapes.
+
+Layout: grid (B, C/TC, S/TS); the sequence axis is the innermost
+(sequential) grid dimension, carrying ``h`` across steps in scratch — the
+standard Pallas accumulator idiom.  Channels fill the lanes; the in-chunk
+time loop is sequential (true data dependence) over dense (TC, N) vector
+ops.
+
+Forward-only kernel: training wraps it in ``jax.custom_vjp`` whose
+backward recomputes forward chunks (same recompute policy the chunked-scan
+path uses); serving/prefill uses it directly.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+Array = jax.Array
+
+
+def _mamba_scan_kernel(
+    d_ref,      # (1, TS, TC) delta (post-softplus) f32
+    u_ref,      # (1, TS, TC)
+    A_ref,      # (TC, N)
+    b_ref,      # (1, TS, N)
+    c_ref,      # (1, TS, N)
+    h0_ref,     # (1, TC, N)
+    y_ref,      # (1, TS, TC) out
+    hT_ref,     # (1, TC, N) out (final state)
+    h_scratch,  # (TC, N) VMEM
+    *,
+    ts: int,
+    n_steps: int,
+):
+    step = pl.program_id(2)
+
+    @pl.when(step == 0)
+    def _init():
+        h_scratch[...] = h0_ref[0]
+
+    A = A_ref[...]                                    # (TC, N)
+    h = h_scratch[...]
+    d = d_ref[0]                                      # (TS, TC)
+    u = u_ref[0]
+    bm = b_ref[0]                                     # (TS, N)
+    cm = c_ref[0]
+
+    def t_step(t, carry):
+        h = carry
+        dt = lax.dynamic_slice(d, (t, 0), (1, d.shape[1]))[0]     # (TC,)
+        ut = lax.dynamic_slice(u, (t, 0), (1, u.shape[1]))[0]
+        bt = lax.dynamic_slice(bm, (t, 0), (1, bm.shape[1]))[0]   # (N,)
+        ct = lax.dynamic_slice(cm, (t, 0), (1, cm.shape[1]))[0]
+        a_t = jnp.exp(dt[:, None] * A)                            # (TC, N)
+        h = a_t * h + (dt * ut)[:, None] * bt[None, :]
+        y_t = jnp.sum(h * ct[None, :], axis=1)                    # (TC,)
+        y_ref[0, t, :] = y_t
+        return h
+
+    h = lax.fori_loop(0, ts, t_step, h)
+    h_scratch[...] = h
+
+    @pl.when(step == n_steps - 1)
+    def _final():
+        hT_ref[0] = h_scratch[...]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("tile_c", "tile_s", "interpret")
+)
+def mamba_scan_pallas(
+    delta: Array,   # (B, S, C) f32
+    u: Array,       # (B, S, C) f32
+    A: Array,       # (C, N) f32
+    Bmat: Array,    # (B, S, N) f32
+    Cmat: Array,    # (B, S, N) f32
+    h0: Array,      # (B, C, N) f32
+    *,
+    tile_c: int = 512,
+    tile_s: int = 256,
+    interpret: bool = False,
+) -> tuple[Array, Array]:
+    """Fused selective scan: returns (y (B, S, C), h_final (B, C, N))."""
+    B, S, C = delta.shape
+    N = A.shape[1]
+    tile_c = min(tile_c, C)
+    tile_s = min(tile_s, S)
+    pc, ps = (-C) % tile_c, (-S) % tile_s
+    if pc:
+        delta = jnp.pad(delta, ((0, 0), (0, 0), (0, pc)))
+        u = jnp.pad(u, ((0, 0), (0, 0), (0, pc)))
+        A = jnp.pad(A, ((0, pc), (0, 0)))
+        h0 = jnp.pad(h0, ((0, 0), (0, pc), (0, 0)))
+    if ps:
+        # identity steps: delta = 0 -> h unchanged, y rows discarded
+        delta = jnp.pad(delta, ((0, 0), (0, ps), (0, 0)))
+        u = jnp.pad(u, ((0, 0), (0, ps), (0, 0)))
+        Bmat = jnp.pad(Bmat, ((0, 0), (0, ps), (0, 0)))
+        Cmat = jnp.pad(Cmat, ((0, 0), (0, ps), (0, 0)))
+    Sp, Cp = S + ps, C + pc
+    n_steps = Sp // tile_s
+    grid = (B, Cp // tile_c, n_steps)
+
+    out = pl.pallas_call(
+        functools.partial(
+            _mamba_scan_kernel, ts=tile_s, n_steps=n_steps
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, tile_s, tile_c), lambda b, c, s: (b, s, c)),
+            pl.BlockSpec((1, tile_s, tile_c), lambda b, c, s: (b, s, c)),
+            pl.BlockSpec((tile_c, N), lambda b, c, s: (c, 0)),
+            pl.BlockSpec((1, tile_s, N), lambda b, c, s: (b, s, 0)),
+            pl.BlockSpec((1, tile_s, N), lambda b, c, s: (b, s, 0)),
+            pl.BlockSpec((1, tile_c, N), lambda b, c, s: (b, c, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, tile_s, tile_c), lambda b, c, s: (b, s, c)),
+            pl.BlockSpec((1, tile_c, N), lambda b, c, s: (b, c, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, Sp, Cp), delta.dtype),
+            jax.ShapeDtypeStruct((B, Cp, N), h0.dtype),
+        ],
+        scratch_shapes=[pltpu.VMEM((tile_c, N), jnp.float32)],
+        interpret=interpret,
+    )(delta, u, A, Bmat, Cmat, h0)
+    y, hT = out
+    return y[:, :S, :C], hT[:, :C, :]

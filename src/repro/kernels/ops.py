@@ -1,0 +1,152 @@
+"""Jitted public entry points for the Pallas kernels.
+
+Dispatch policy:
+  * on TPU backends the kernels run compiled (interpret=False);
+  * on CPU (this container) they run in ``interpret=True`` mode, which
+    executes the kernel bodies in Python for bit-faithful validation;
+  * shapes outside kernel limits (very long series that exceed the VMEM
+    budget documented in each kernel) fall back to the pure-jnp reference,
+    so the public API never fails on shape grounds.
+
+All entry points accept/return plain arrays and are safe to ``jax.jit``
+(and to call inside ``shard_map`` — see search/distributed.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.dtw_band import dtw_band_pallas
+from repro.kernels.envelope import envelope_pallas
+from repro.kernels.lb_enhanced import lb_enhanced_pallas
+from repro.kernels.lb_keogh import lb_keogh_pallas
+from repro.kernels.mamba_scan import mamba_scan_pallas
+
+Array = jax.Array
+
+# VMEM-derived shape limits (see per-kernel headers for the budgets)
+_ENVELOPE_MAX_L = 65536
+_LB_MAX_L = 16384
+_DTW_MAX_L = 4096
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def envelope_op(b: Array, w: int) -> tuple[Array, Array]:
+    """Batched Sakoe-Chiba envelopes ``(N, L) -> (U, L)`` pair."""
+    b = jnp.asarray(b)
+    squeeze = b.ndim == 1
+    if squeeze:
+        b = b[None]
+    if b.shape[-1] > _ENVELOPE_MAX_L:
+        u, lo = ref.envelope_ref(b, w)
+    else:
+        u, lo = envelope_pallas(b, w, interpret=_interpret())
+    return (u[0], lo[0]) if squeeze else (u, lo)
+
+
+def lb_keogh_op(q: Array, u: Array, lo: Array) -> Array:
+    """``(Q, L) x (C, L) envelopes -> (Q, C)`` LB_KEOGH matrix."""
+    if q.shape[-1] > _LB_MAX_L:
+        return ref.lb_keogh_ref(q, u, lo)
+    return lb_keogh_pallas(q, u, lo, interpret=_interpret())
+
+
+def lb_enhanced_op(
+    q: Array, c: Array, u: Array, lo: Array, w: int, v: int,
+    *, bands_only: bool = False,
+) -> Array:
+    """``(Q, L) x (C, L) -> (Q, C)`` fused LB_ENHANCED^V matrix."""
+    if q.shape[-1] > _LB_MAX_L:
+        return ref.lb_enhanced_ref(q, c, u, lo, w, v, bands_only=bands_only)
+    return lb_enhanced_pallas(
+        q, c, u, lo, w, v, bands_only=bands_only, interpret=_interpret()
+    )
+
+
+def dtw_band_op(a: Array, b: Array, w: int | None = None) -> Array:
+    """Pairwise banded DTW ``(P, L) x (P, L) -> (P,)``."""
+    if a.shape[-1] > _DTW_MAX_L:
+        return ref.dtw_band_ref(a, b, w)
+    return dtw_band_pallas(a, b, w, interpret=_interpret())
+
+
+# ---------------------------------------------------------------------------
+# Fused Mamba selective scan (forward = Pallas kernel; backward recomputes
+# through the differentiable chunked-scan reference — same recompute policy
+# the remat'd scan path uses, so training numerics are identical).
+# ---------------------------------------------------------------------------
+
+@jax.custom_vjp
+def mamba_scan_op(delta, u, A, Bmat, Cmat, h0):
+    """Fused selective scan: (y (B,S,C), h_final (B,C,N))."""
+    return mamba_scan_pallas(delta, u, A, Bmat, Cmat, h0,
+                             interpret=_interpret())
+
+
+def _mamba_fwd(delta, u, A, Bmat, Cmat, h0):
+    out = mamba_scan_op(delta, u, A, Bmat, Cmat, h0)
+    return out, (delta, u, A, Bmat, Cmat, h0)
+
+
+def _mamba_bwd(res, cts):
+    from repro.models.mamba import _chunked_selective_scan
+
+    delta, u, A, Bmat, Cmat, h0 = res
+    _, vjp = jax.vjp(
+        lambda d, uu, a, bm, cm, h: _chunked_selective_scan(
+            d, uu, a, bm, cm, h, chunk=256
+        ),
+        delta, u, A, Bmat, Cmat, h0,
+    )
+    return vjp(cts)
+
+
+mamba_scan_op.defvjp(_mamba_fwd, _mamba_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Fused flash attention (forward = Pallas kernel; backward recomputes
+# through the chunked-jnp reference, matching the remat policy).
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def flash_attention_op(q, k, v, causal=True, window=None, score_cap=None):
+    """Fused self-attention forward: (B, Sq, Hq, D) x (B, Skv, Hkv, D)."""
+    from repro.kernels.flash_attention import flash_attention_pallas
+
+    return flash_attention_pallas(
+        q, k, v, causal=causal, window=window, score_cap=score_cap,
+        interpret=_interpret(),
+    )
+
+
+def _fa_fwd(q, k, v, causal, window, score_cap):
+    return flash_attention_op(q, k, v, causal, window, score_cap), (q, k, v)
+
+
+def _fa_bwd(causal, window, score_cap, res, ct):
+    from repro.models.attention import flash_attention
+
+    q, k, v = res
+    B, Sq = q.shape[0], q.shape[1]
+    Skv = k.shape[1]
+    pos_q = jnp.broadcast_to(jnp.arange(Sq, dtype=jnp.int32)[None], (B, Sq))
+    pos_k = jnp.broadcast_to(jnp.arange(Skv, dtype=jnp.int32)[None], (B, Skv))
+    _, vjp = jax.vjp(
+        lambda qq, kk, vv: flash_attention(
+            qq, kk, vv, pos_q, pos_k, causal=causal, window=window,
+            score_cap=score_cap,
+        ),
+        q, k, v,
+    )
+    return vjp(ct)
+
+
+flash_attention_op.defvjp(_fa_fwd, _fa_bwd)

@@ -1,0 +1,48 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each ``*_ref`` mirrors its kernel's public semantics exactly (same shapes,
+same dtypes, same window/band conventions) using only ``jax.numpy`` — these
+are the references the shape/dtype sweep tests assert_allclose against.
+They delegate to the core library, which is itself validated against the
+loop-based paper transcription in ``repro.core.oracle``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import envelopes as _env
+from repro.core import lower_bounds as _lb
+from repro.core.dtw import dtw as _dtw_fn
+
+Array = jax.Array
+
+
+def envelope_ref(b: Array, w: int) -> tuple[Array, Array]:
+    """``(N, L) -> ((N, L), (N, L))`` upper/lower envelopes."""
+    return _env.envelope(b, w)
+
+
+def lb_keogh_ref(q: Array, u: Array, lo: Array) -> Array:
+    """``(Q, L) x (C, L) envelopes -> (Q, C)``."""
+    return _lb.lb_keogh_matrix(q, u, lo)
+
+
+def lb_enhanced_ref(
+    q: Array, c: Array, u: Array, lo: Array, w: int, v: int,
+    *, bands_only: bool = False,
+) -> Array:
+    """``(Q, L) x (C, L) -> (Q, C)`` LB_ENHANCED^V (or bands-only tier)."""
+    if bands_only:
+        fn = jax.vmap(
+            jax.vmap(_lb.lb_enhanced_bands, (None, 0, None, None)),
+            (0, None, None, None),
+        )
+        return fn(q, c, w, v)
+    return _lb.lb_enhanced_matrix(q, c, u, lo, w, v)
+
+
+def dtw_band_ref(a: Array, b: Array, w: int | None = None) -> Array:
+    """Pairwise banded DTW ``(P, L), (P, L) -> (P,)``."""
+    return jax.vmap(_dtw_fn, (0, 0, None))(a, b, w)

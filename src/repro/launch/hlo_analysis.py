@@ -1,0 +1,158 @@
+"""Roofline-term extraction from compiled SPMD artifacts.
+
+``cost_analysis()`` supplies per-device HLO FLOPs and bytes; collective
+wire bytes are *not* in cost_analysis, so we parse the optimised
+(post-partitioning) HLO text and sum per-collective wire traffic with
+ring-algorithm accounting:
+
+  all-reduce        2 * bytes * (g-1)/g     (reduce-scatter + all-gather)
+  all-gather        bytes * (g-1)/g         (bytes = gathered result)
+  reduce-scatter    bytes_out * (g-1)       (bytes_out = local shard)
+  all-to-all        bytes * (g-1)/g
+  collective-permute bytes
+
+Hardware constants (v5e-class, per chip): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI (given in the assignment).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Total bytes of a (possibly tuple) HLO type string."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.groups()
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, n_devices: int) -> int:
+    m = re.search(r"replica_groups=\{\{([^}]*)\}", line)
+    if m:
+        return max(1, m.group(1).count(",") + 1)
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
+    if m:  # iota format [groups, group_size]
+        return max(1, int(m.group(2)))
+    return n_devices
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    wire_bytes: float = 0.0
+    by_kind: dict[str, float] = dataclasses.field(default_factory=dict)
+    count: int = 0
+
+    def add(self, kind: str, b: float) -> None:
+        self.wire_bytes += b
+        self.by_kind[kind] = self.by_kind.get(kind, 0.0) + b
+        self.count += 1
+
+
+def collective_bytes(hlo_text: str, n_devices: int) -> CollectiveStats:
+    """Per-device collective wire bytes from optimised HLO text."""
+    stats = CollectiveStats()
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        m = re.match(r"(?:ROOT\s+)?%?[\w.\-]+\s*=\s*(\([^)]*\)|\S+)\s+([\w-]+)", ls)
+        if not m:
+            continue
+        result_type, op = m.groups()
+        kind = None
+        for c in _COLLECTIVES:
+            if op == c or op.startswith(c + "-start"):
+                kind = c
+                break
+        if kind is None:
+            continue
+        b = _shape_bytes(result_type)
+        g = _group_size(ls, n_devices)
+        if g <= 1:
+            continue
+        if kind == "all-reduce":
+            wire = 2.0 * b * (g - 1) / g
+        elif kind == "all-gather":
+            wire = b * (g - 1) / g
+        elif kind == "reduce-scatter":
+            wire = b * (g - 1)
+        elif kind == "all-to-all":
+            wire = b * (g - 1) / g
+        else:  # collective-permute
+            wire = float(b)
+        stats.add(kind, wire)
+    return stats
+
+
+def roofline(
+    cost: dict[str, Any],
+    coll: CollectiveStats,
+    *,
+    model_flops: float,
+    n_devices: int,
+    ideal_bytes_per_device: float = 0.0,
+) -> dict[str, Any]:
+    """The three roofline terms (seconds, per device) + bottleneck.
+
+    ``roofline_fraction`` = speed-of-light step time / bound step time,
+    where speed-of-light = max(useful-FLOPs time, mandatory-bytes time).
+    The mandatory-bytes floor matters for decode (param+cache reads bound
+    the step no matter how good the kernels are).
+    """
+    flops = float(cost.get("flops", 0.0))
+    mem_bytes = float(cost.get("bytes accessed", 0.0))
+    compute_s = flops / PEAK_FLOPS
+    memory_s = mem_bytes / HBM_BW
+    collective_s = coll.wire_bytes / ICI_BW
+    terms = {
+        "compute": compute_s, "memory": memory_s, "collective": collective_s
+    }
+    dominant = max(terms, key=terms.get)
+    step_s = max(terms.values())
+    useful = model_flops / n_devices / PEAK_FLOPS if model_flops else 0.0
+    ideal_mem_s = ideal_bytes_per_device / HBM_BW
+    sol_s = max(useful, ideal_mem_s)
+    return {
+        "flops_per_device": flops,
+        "hbm_bytes_per_device": mem_bytes,
+        "collective_bytes_per_device": coll.wire_bytes,
+        "collective_by_kind": coll.by_kind,
+        "n_collectives": coll.count,
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": collective_s,
+        "dominant": dominant,
+        "bound_step_s": step_s,
+        "model_flops": model_flops,
+        "model_flops_per_device": model_flops / n_devices if model_flops else 0.0,
+        "useful_compute_s": useful,
+        "ideal_memory_s": ideal_mem_s,
+        "speed_of_light_s": sol_s,
+        "useful_flops_ratio": (model_flops / n_devices / flops) if flops and model_flops else 0.0,
+        "roofline_fraction": sol_s / step_s if step_s else 0.0,
+    }

@@ -1,0 +1,118 @@
+"""Production training driver.
+
+Single-host usage (reduced preset runs on this CPU container):
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2.5-3b \
+      --preset reduced --steps 50 --ckpt-dir /tmp/ckpt
+
+On a pod the same driver runs under the production mesh: the mesh is
+re-planned from the live device count (elastic), the latest checkpoint is
+restored with resharding, the data pipeline resumes from its cursor, and a
+heartbeat file is refreshed every step for the straggler monitor.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.registry import ARCHS, get_arch, reduced
+from repro.data.tokens import TokenPipeline
+from repro.distributed.elastic import Heartbeat, plan_mesh
+from repro.distributed.sharding import AxisRules, param_shardings
+from repro.launch.mesh import make_host_mesh
+from repro.models.model import LM
+from repro.train.checkpoint import latest_step, restore_checkpoint, save_checkpoint
+from repro.train.optimizer import OptConfig
+from repro.train.trainer import init_state, make_train_step
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2.5-3b", choices=sorted(ARCHS))
+    ap.add_argument("--preset", default="reduced", choices=["reduced", "full"])
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--heartbeat", default=None)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch)
+    if args.preset == "reduced":
+        cfg = reduced(cfg)
+
+    n_dev = len(jax.devices())
+    mesh = None
+    rules = AxisRules()
+    if n_dev > 1:
+        plan = plan_mesh(n_dev)
+        mesh = make_host_mesh(plan.shape, plan.axes)
+        rules = AxisRules.for_mesh(mesh)
+        print(f"mesh: {plan.shape} {plan.axes}")
+
+    model = LM(cfg=cfg, mesh=mesh, dp_axes=rules.dp)
+    opt_cfg = OptConfig(lr=args.lr, warmup=10)
+    state = init_state(model, jax.random.PRNGKey(0), opt_cfg)
+    if mesh is not None:
+        pspecs = param_shardings(cfg, mesh, rules, state.params)
+        state = dataclasses.replace(
+            state,
+            params=jax.device_put(state.params, pspecs),
+            opt=jax.tree.map(
+                lambda x: x, state.opt
+            ),
+        )
+
+    pipe = TokenPipeline(cfg.vocab, args.batch, args.seq, seed=0)
+    start = 0
+    if args.ckpt_dir and latest_step(args.ckpt_dir) is not None:
+        like = jax.tree.map(jnp.zeros_like, state)
+        state, extra = restore_checkpoint(args.ckpt_dir, like)
+        pipe.restore(extra["pipeline"])
+        start = int(state.step)
+        print(f"restored step {start} from {args.ckpt_dir}")
+
+    hb = Heartbeat(args.heartbeat) if args.heartbeat else None
+    step_fn = jax.jit(
+        make_train_step(model, opt_cfg, grad_accum=args.grad_accum)
+    )
+
+    t0 = time.time()
+    for i in range(start, args.steps):
+        batch_np = pipe.next_batch()
+        batch = {k: jnp.asarray(v) for k, v in batch_np.items()}
+        if mesh is not None:
+            bs = NamedSharding(mesh, P(rules.dp, None))
+            batch = {k: jax.device_put(v, bs) for k, v in batch.items()}
+        state, metrics = step_fn(state, batch)
+        if hb:
+            hb.beat(i)
+        if (i + 1) % args.log_every == 0 or i == start:
+            loss = float(metrics["loss"])
+            dt = time.time() - t0
+            print(f"step {i + 1:5d}  loss {loss:.4f}  "
+                  f"({dt / max(i + 1 - start, 1):.2f}s/step)", flush=True)
+        if args.ckpt_dir and (i + 1) % args.ckpt_every == 0:
+            save_checkpoint(
+                args.ckpt_dir, i + 1, state, extra={"pipeline": pipe.state()}
+            )
+    if args.ckpt_dir:
+        save_checkpoint(
+            args.ckpt_dir, args.steps, state, extra={"pipeline": pipe.state()}
+        )
+    print("done.")
+
+
+if __name__ == "__main__":
+    main()

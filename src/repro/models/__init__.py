@@ -1,0 +1,5 @@
+"""Sequence-model substrate: layers, attention, Mamba, MoE, assembled LM."""
+
+from repro.models.model import LM
+
+__all__ = ["LM"]

@@ -1,0 +1,253 @@
+"""GQA attention with chunked (flash-style) softmax, sliding windows,
+softcaps, RoPE/M-RoPE, and KV-cache decode.
+
+The softmax is computed online over KV chunks (``lax.scan`` carrying the
+running max / normaliser / accumulator), so peak memory is
+O(B * H * Sq * kv_chunk) instead of O(B * H * Sq * Skv) — this is what makes
+the 32k prefill and 512k-cache decode shapes lower without materialising
+quadratic score tensors, and it keeps the scanned-layer HLO compact for the
+multi-pod dry-run (DESIGN.md SS6).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.layers import apply_mrope, apply_rope, softcap
+
+Array = jax.Array
+
+_NEG = -2.3819763e38  # large negative for masking in f32
+
+
+def attn_init(
+    rng,
+    d_model: int,
+    n_heads: int,
+    n_kv_heads: int,
+    d_head: int,
+    *,
+    qkv_bias: bool = False,
+) -> dict[str, Array]:
+    ki = jax.nn.initializers.lecun_normal()
+    ks = jax.random.split(rng, 4)
+    p = {
+        "wq": ki(ks[0], (d_model, n_heads * d_head), jnp.float32),
+        "wk": ki(ks[1], (d_model, n_kv_heads * d_head), jnp.float32),
+        "wv": ki(ks[2], (d_model, n_kv_heads * d_head), jnp.float32),
+        "wo": ki(ks[3], (n_heads * d_head, d_model), jnp.float32),
+    }
+    if qkv_bias:
+        p["bq"] = jnp.zeros((n_heads * d_head,), jnp.float32)
+        p["bk"] = jnp.zeros((n_kv_heads * d_head,), jnp.float32)
+        p["bv"] = jnp.zeros((n_kv_heads * d_head,), jnp.float32)
+    return p
+
+
+def flash_attention(
+    q: Array,           # (B, Sq, Hq, D)
+    k: Array,           # (B, Skv, Hkv, D)
+    v: Array,           # (B, Skv, Hkv, D)
+    q_pos: Array,       # (B, Sq) int32
+    kv_pos: Array,      # (B, Skv) int32
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    score_cap: float | None = None,
+    kv_valid: Array | None = None,   # (B, Skv) bool
+    kv_chunk: int = 1024,
+    unroll: bool = False,
+) -> Array:
+    """Online-softmax attention. Returns (B, Sq, Hq, D)."""
+    B, Sq, Hq, D = q.shape
+    _, Skv, Hkv, _ = k.shape
+    g = Hq // Hkv
+    scale = D ** -0.5
+    qf = (q.astype(jnp.float32) * scale).reshape(B, Sq, Hkv, g, D)
+    qf = qf.transpose(0, 2, 3, 1, 4)                  # (B, Hkv, g, Sq, D)
+
+    kv_chunk = min(kv_chunk, Skv)
+    pad = (-Skv) % kv_chunk
+    if kv_valid is None:
+        kv_valid = jnp.ones((B, Skv), bool)
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_pos = jnp.pad(kv_pos, ((0, 0), (0, pad)))
+        kv_valid = jnp.pad(kv_valid, ((0, 0), (0, pad)))
+    n_chunks = (Skv + pad) // kv_chunk
+    kc = k.reshape(B, n_chunks, kv_chunk, Hkv, D).transpose(1, 0, 3, 2, 4)
+    vc = v.reshape(B, n_chunks, kv_chunk, Hkv, D).transpose(1, 0, 3, 2, 4)
+    pc = kv_pos.reshape(B, n_chunks, kv_chunk).swapaxes(0, 1)
+    mc = kv_valid.reshape(B, n_chunks, kv_chunk).swapaxes(0, 1)
+
+    def body(carry, xs):
+        m, l, acc = carry
+        k_i, v_i, p_i, valid_i = xs                   # (B, Hkv, C, D) etc.
+        s = jnp.einsum(
+            "bhgqd,bhcd->bhgqc", qf, k_i.astype(jnp.float32)
+        )                                              # (B, Hkv, g, Sq, C)
+        if score_cap is not None:
+            s = softcap(s, score_cap)
+        ok = valid_i[:, None, None, None, :]
+        dp = q_pos[:, None, None, :, None] - p_i[:, None, None, None, :]
+        if causal:
+            ok = ok & (dp >= 0)
+        if window is not None:
+            ok = ok & (dp < window)
+        s = jnp.where(ok, s, _NEG)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m - m_new)
+        p = jnp.exp(s - m_new[..., None])
+        l_new = l * alpha + jnp.sum(p, axis=-1)
+        acc_new = acc * alpha[..., None] + jnp.einsum(
+            "bhgqc,bhcd->bhgqd", p, v_i.astype(jnp.float32)
+        )
+        return (m_new, l_new, acc_new), None
+
+    init = (
+        jnp.full((B, Hkv, g, Sq), _NEG, jnp.float32),
+        jnp.zeros((B, Hkv, g, Sq), jnp.float32),
+        jnp.zeros((B, Hkv, g, Sq, D), jnp.float32),
+    )
+    # checkpoint: recompute each chunk's score/softmax block in backward —
+    # without it the scan saves the (B, Hkv, g, Sq, C) probability tensor
+    # for every KV chunk, reintroducing the quadratic memory this chunked
+    # formulation exists to avoid.
+    if unroll:   # cost-probe mode: identical math, while-free HLO
+        carry = init
+        for i in range(n_chunks):
+            carry, _ = body(carry, (kc[i], vc[i], pc[i], mc[i]))
+        m, l, acc = carry
+    else:
+        (m, l, acc), _ = lax.scan(jax.checkpoint(body), init, (kc, vc, pc, mc))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]      # (B, Hkv, g, Sq, D)
+    out = out.transpose(0, 3, 1, 2, 4).reshape(B, Sq, Hq, D)
+    return out.astype(q.dtype)
+
+
+def attn_apply(
+    p: dict[str, Array],
+    x: Array,                       # (B, S, d_model)
+    positions: Array,               # (B, S) or (B, 3, S) for M-RoPE
+    *,
+    n_heads: int,
+    n_kv_heads: int,
+    d_head: int,
+    causal: bool = True,
+    window: int | None = None,
+    score_cap: float | None = None,
+    rope_theta: float = 10000.0,
+    mrope_sections: tuple[int, ...] | None = None,
+    cache: dict[str, Array] | None = None,
+    cache_index: Array | None = None,
+    kv_chunk: int = 1024,
+    unroll: bool = False,
+    impl: str = "chunked",   # "chunked" | "pallas" | "bypass" (probes only)
+    ctx=None,
+) -> tuple[Array, dict[str, Array] | None]:
+    """Self-attention (train/prefill) or cached decode step.
+
+    If ``cache`` is given, the current k/v are written at ``cache_index``
+    and attention runs against the whole cache (unwritten slots masked).
+    ``impl="pallas"`` routes self-attention (no cache) through the fused
+    flash kernel; ``"bypass"`` is the dry-run cost-probe stand-in.
+    Returns (output, updated cache or None).
+    """
+    B, S, _ = x.shape
+    dt = x.dtype
+    q = x @ p["wq"].astype(dt)
+    k = x @ p["wk"].astype(dt)
+    v = x @ p["wv"].astype(dt)
+    if "bq" in p:
+        q = q + p["bq"].astype(dt)
+        k = k + p["bk"].astype(dt)
+        v = v + p["bv"].astype(dt)
+    q = q.reshape(B, S, n_heads, d_head)
+    k = k.reshape(B, S, n_kv_heads, d_head)
+    v = v.reshape(B, S, n_kv_heads, d_head)
+    if ctx is not None:   # heads over tp (replicated when not divisible)
+        q = ctx.con(q, "dp", None, "tp", None)
+        k = ctx.con(k, "dp", None, "tp", None)
+        v = ctx.con(v, "dp", None, "tp", None)
+
+    if mrope_sections is not None:
+        q = apply_mrope(q, positions, mrope_sections, rope_theta)
+        k = apply_mrope(k, positions, mrope_sections, rope_theta)
+        q_pos = positions[:, 0, :]
+    else:
+        q = apply_rope(q, positions, rope_theta)
+        k = apply_rope(k, positions, rope_theta)
+        q_pos = positions
+
+    if cache is None:
+        if impl == "pallas":
+            from repro.kernels.ops import flash_attention_op
+
+            out = flash_attention_op(q, k, v, causal, window, score_cap)
+        elif impl == "bypass":
+            # probe stand-in: correct shapes, no score computation
+            g = n_heads // n_kv_heads
+            out = jnp.repeat(v, g, axis=2) * (q_pos[..., None, None] * 0 + 1.0)
+        else:
+            out = flash_attention(
+                q, k, v, q_pos, q_pos,
+                causal=causal, window=window, score_cap=score_cap,
+                kv_chunk=kv_chunk, unroll=unroll,
+            )
+        new_cache = None
+    else:
+        # decode/prefill: write this step's k/v, attend over the prefix
+        Smax = cache["k"].shape[1]
+        ck = lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, cache_index, 0, 0)
+        )
+        cv = lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, cache_index, 0, 0)
+        )
+        if S == Smax and impl in ("pallas", "bypass"):
+            # full-cache prefill: attention over the cache == self-attention
+            if impl == "pallas":
+                from repro.kernels.ops import flash_attention_op
+
+                out = flash_attention_op(q, k, v, causal, window, score_cap)
+            else:
+                g = n_heads // n_kv_heads
+                out = jnp.repeat(v, g, axis=2) * (
+                    q_pos[..., None, None] * 0 + 1.0
+                )
+        else:
+            slot_pos = jnp.arange(Smax, dtype=jnp.int32)
+            kv_valid = (slot_pos < cache_index + S)[None, :]
+            kv_valid = jnp.broadcast_to(kv_valid, (B, Smax))
+            kv_pos = jnp.broadcast_to(slot_pos[None, :], (B, Smax))
+            out = flash_attention(
+                q, ck.astype(dt), cv.astype(dt), q_pos, kv_pos,
+                causal=causal, window=window, score_cap=score_cap,
+                kv_valid=kv_valid, kv_chunk=kv_chunk, unroll=unroll,
+            )
+        new_cache = {"k": ck, "v": cv}
+
+    out = out.reshape(B, S, n_heads * d_head)
+    if ctx is not None:
+        out = ctx.con(out, "dp", None, "tp")
+    out = out @ p["wo"].astype(dt)
+    if ctx is not None:
+        out = ctx.con(out, "dp", None, None)
+    return out, new_cache
+
+
+def init_cache(
+    batch: int,
+    max_len: int,
+    n_kv_heads: int,
+    d_head: int,
+    dtype=jnp.bfloat16,
+) -> dict[str, Array]:
+    shape = (batch, max_len, n_kv_heads, d_head)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}

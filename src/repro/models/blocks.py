@@ -1,0 +1,126 @@
+"""Transformer/Mamba block assembly driven by ``LayerSpec``.
+
+A block = pre-norm mixer (attention or Mamba) + residual, then pre-norm FFN
+(dense MLP or MoE) + residual.  The period structure from
+``ArchConfig.layout()`` is static, so the scanned stack body in model.py
+unrolls the (small) period and scans over repeats — the key to compact HLO
+for 24-80 layer archs on the multi-pod dry-run.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from repro.configs.base import ArchConfig, LayerSpec
+from repro.models.attention import attn_apply, attn_init
+from repro.models.layers import mlp_apply, mlp_init, rms_norm
+from repro.models.mamba import mamba_apply, mamba_init
+from repro.models.moe import moe_apply, moe_init
+
+Array = jax.Array
+
+
+def layer_init(rng, cfg: ArchConfig, spec: LayerSpec) -> dict[str, Any]:
+    ks = jax.random.split(rng, 3)
+    p: dict[str, Any] = {"norm1": jnp.zeros((cfg.d_model,), jnp.float32)}
+    if spec.mixer == "attn":
+        p["attn"] = attn_init(
+            ks[0], cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim,
+            qkv_bias=cfg.qkv_bias,
+        )
+    else:
+        p["mamba"] = mamba_init(
+            ks[0], cfg.d_model, cfg.d_inner_, cfg.ssm_state, cfg.dt_rank_,
+            cfg.conv_width,
+        )
+    if spec.moe:
+        p["norm2"] = jnp.zeros((cfg.d_model,), jnp.float32)
+        p["moe"] = moe_init(
+            ks[1], cfg.d_model, cfg.d_expert or cfg.d_ff,
+            cfg.n_experts_padded, cfg.n_shared_experts, cfg.act,
+        )
+    elif cfg.d_ff > 0:
+        p["norm2"] = jnp.zeros((cfg.d_model,), jnp.float32)
+        p["mlp"] = mlp_init(ks[1], cfg.d_model, cfg.d_ff, cfg.act)
+    return p
+
+
+def layer_apply(
+    cfg: ArchConfig,
+    spec: LayerSpec,
+    p: dict[str, Any],
+    x: Array,
+    positions: Array,
+    *,
+    mesh: Mesh | None,
+    dp_axes: tuple[str, ...],
+    cache: dict[str, Array] | None = None,
+    cache_index: Array | None = None,
+    kv_chunk: int = 1024,
+    mamba_chunk: int = 256,
+    unroll: bool = False,
+    mamba_scan_dtype=None,
+    ssm_impl: str = "scan",
+    attn_impl: str = "chunked",
+    ctx=None,
+) -> tuple[Array, dict[str, Array] | None, Array]:
+    """Apply one block. Returns (x, new_cache, aux_loss)."""
+    import jax.numpy as _jnp
+    h = rms_norm(x, p["norm1"], cfg.norm_eps)
+    if spec.mixer == "attn":
+        out, new_cache = attn_apply(
+            p["attn"], h, positions,
+            n_heads=cfg.n_heads, n_kv_heads=cfg.n_kv_heads,
+            d_head=cfg.head_dim, causal=cfg.causal, window=spec.window,
+            score_cap=cfg.attn_softcap, rope_theta=cfg.rope_theta,
+            mrope_sections=cfg.mrope_sections,
+            cache=cache, cache_index=cache_index, kv_chunk=kv_chunk,
+            unroll=unroll,
+            impl=attn_impl if x.shape[1] > 1 else "chunked",
+            ctx=ctx,
+        )
+    else:
+        out, new_cache = mamba_apply(
+            p["mamba"], h, d_state=cfg.ssm_state, conv_width=cfg.conv_width,
+            chunk=mamba_chunk, cache=cache, unroll=unroll,
+            scan_dtype=mamba_scan_dtype or _jnp.float32,
+            impl=ssm_impl if x.shape[1] > 1 else "scan", ctx=ctx,
+        )
+    x = x + out
+    aux = jnp.zeros((), jnp.float32)
+    if spec.moe:
+        h = rms_norm(x, p["norm2"], cfg.norm_eps)
+        out, aux = moe_apply(
+            p["moe"], h, top_k=cfg.top_k, n_real=cfg.n_experts,
+            act=cfg.act, mesh=mesh, dp_axes=dp_axes, ctx=ctx,
+        )
+        x = x + out
+    elif cfg.d_ff > 0:
+        h = rms_norm(x, p["norm2"], cfg.norm_eps)
+        x = x + mlp_apply(p["mlp"], h, cfg.act, ctx=ctx)
+    if ctx is not None:
+        # "sp": with seq-sharded residuals (Megatron-SP) the f32 norm
+        # intermediates shard over tp; no-op otherwise
+        x = ctx.con(x, "dp", "sp", None)
+    return x, new_cache, aux
+
+
+def init_layer_cache(
+    cfg: ArchConfig,
+    spec: LayerSpec,
+    batch: int,
+    max_len: int,
+    dtype=jnp.bfloat16,
+) -> dict[str, Array]:
+    """Decode-state for one layer (KV cache or SSM state)."""
+    if spec.mixer == "attn":
+        shape = (batch, max_len, cfg.n_kv_heads, cfg.head_dim)
+        return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+    return {
+        "h": jnp.zeros((batch, cfg.d_inner_, cfg.ssm_state), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, cfg.d_inner_), dtype),
+    }

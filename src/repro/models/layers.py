@@ -1,0 +1,204 @@
+"""Shared neural layers: norms, rotary embeddings (incl. M-RoPE), MLPs.
+
+Conventions:
+  * params are plain nested dicts of jnp arrays (fp32 at rest);
+  * compute runs in bf16 (``cfg.compute_dtype``), losses in fp32;
+  * all shapes are ``(batch, seq, ...)``; heads axes are explicit;
+  * sharding is applied by the caller via constraint helpers in
+    repro.distributed.sharding — layers stay mesh-agnostic.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def rms_norm(x: Array, scale: Array, eps: float = 1e-6) -> Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    return (x * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def softcap(x: Array, cap: float | None) -> Array:
+    """Gemma-2 style logit soft-capping: ``cap * tanh(x / cap)``."""
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+def activation(name: str):
+    if name == "silu":
+        return jax.nn.silu
+    if name == "gelu":
+        return jax.nn.gelu
+    raise ValueError(f"unknown activation {name!r}")
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings (standard + multimodal M-RoPE)
+# ---------------------------------------------------------------------------
+
+def rope_freqs(d_head: int, theta: float) -> Array:
+    """(d_head/2,) inverse frequencies."""
+    return 1.0 / (
+        theta ** (jnp.arange(0, d_head, 2, dtype=jnp.float32) / d_head)
+    )
+
+
+def apply_rope(x: Array, positions: Array, theta: float = 10000.0) -> Array:
+    """Rotary embedding.
+
+    Args:
+      x: (B, S, H, D) queries or keys.
+      positions: (B, S) integer positions.
+    """
+    freqs = rope_freqs(x.shape[-1], theta)                      # (D/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs      # (B, S, D/2)
+    sin = jnp.sin(ang)[:, :, None, :]
+    cos = jnp.cos(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(
+    x: Array,
+    positions: Array,
+    sections: tuple[int, ...],
+    theta: float = 10000.0,
+) -> Array:
+    """Multimodal rotary embedding (Qwen2-VL SS3): the head dim's frequency
+    bands are split into (temporal, height, width) sections, each rotated by
+    its own position stream.
+
+    Args:
+      x: (B, S, H, D).
+      positions: (B, 3, S) integer positions (t, h, w); text tokens carry
+        t == h == w so M-RoPE degrades to 1-D RoPE for them.
+      sections: frequency-band split of D/2, summing to D/2 (e.g. 16/24/24
+        for D=128).
+    """
+    d_half = x.shape[-1] // 2
+    assert sum(sections) == d_half, (sections, d_half)
+    freqs = rope_freqs(x.shape[-1], theta)                      # (D/2,)
+    ang_tri = positions[..., None].astype(jnp.float32) * freqs  # (B, 3, S, D/2)
+    parts = []
+    start = 0
+    for k, sec in enumerate(sections):
+        parts.append(ang_tri[:, k, :, start : start + sec])
+        start += sec
+    ang = jnp.concatenate(parts, axis=-1)                       # (B, S, D/2)
+    sin = jnp.sin(ang)[:, :, None, :]
+    cos = jnp.cos(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Dense / gated MLP
+# ---------------------------------------------------------------------------
+
+def mlp_init(rng, d_model: int, d_ff: int, act: str) -> dict[str, Array]:
+    ki = jax.nn.initializers.lecun_normal()
+    k1, k2, k3 = jax.random.split(rng, 3)
+    p = {
+        "wi": ki(k1, (d_model, d_ff), jnp.float32),
+        "wo": ki(k3, (d_ff, d_model), jnp.float32),
+    }
+    if act == "silu":  # gated (SwiGLU-style)
+        p["wg"] = ki(k2, (d_model, d_ff), jnp.float32)
+    return p
+
+
+def mlp_apply(p: dict[str, Array], x: Array, act: str, ctx=None) -> Array:
+    dt = x.dtype
+    h = x @ p["wi"].astype(dt)
+    if ctx is not None:
+        h = ctx.con(h, "dp", None, "tp")
+    if "wg" in p:
+        h = activation(act)(x @ p["wg"].astype(dt)) * h
+    else:
+        h = activation(act)(h)
+    return h @ p["wo"].astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / output head
+# ---------------------------------------------------------------------------
+
+def embed_init(rng, vocab: int, d_model: int) -> Array:
+    return jax.nn.initializers.normal(0.02)(rng, (vocab, d_model), jnp.float32)
+
+
+def embed_lookup(table: Array, ids: Array, dtype) -> Array:
+    return jnp.take(table, ids, axis=0).astype(dtype)
+
+
+def chunked_cross_entropy(
+    x: Array,
+    w_head: Array,
+    labels: Array,
+    *,
+    chunk: int = 512,
+    final_softcap_val: float | None = None,
+    mask: Array | None = None,
+    unroll: bool = False,
+    ctx=None,
+) -> Array:
+    """Mean next-token cross-entropy without materialising (B, S, V) fp32.
+
+    Scans over sequence chunks: peak memory is (B, chunk, V) instead of
+    (B, S, V) — the difference between fitting and OOMing for the 150k/256k
+    vocab archs at seq 4k (DESIGN.md SS6).
+    """
+    B, S, D = x.shape
+    chunk = min(chunk, S)
+    pad = (-S) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)))
+        mask = jnp.pad(mask, ((0, 0), (0, pad))) if mask is not None else (
+            jnp.pad(jnp.ones((B, S), bool), ((0, 0), (0, pad)))
+        )
+    elif mask is None:
+        mask = jnp.ones((B, S), bool)
+    Sp = x.shape[1]
+    n_chunks = Sp // chunk
+    xc = x.reshape(B, n_chunks, chunk, D).swapaxes(0, 1)
+    lc = labels.reshape(B, n_chunks, chunk).swapaxes(0, 1)
+    mc = mask.reshape(B, n_chunks, chunk).swapaxes(0, 1)
+
+    def body(carry, xs):
+        xi, li, mi = xs
+        logits = (xi @ w_head.astype(xi.dtype)).astype(jnp.float32)
+        if ctx is not None:
+            logits = ctx.con(logits, "dp", None, "tp")
+        if final_softcap_val is not None:
+            logits = softcap(logits, final_softcap_val)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, li[..., None], axis=-1)[..., 0]
+        nll = jnp.where(mi, lse - gold, 0.0)
+        return (carry[0] + jnp.sum(nll), carry[1] + jnp.sum(mi)), None
+
+    # checkpoint: recompute each chunk's logits in backward — otherwise the
+    # scan stashes (B, chunk, V) softmax residuals for *every* chunk and the
+    # chunking saves nothing for training.
+    if unroll:   # cost-probe mode: identical math, while-free HLO
+        carry = (0.0, 0.0)
+        for i in range(n_chunks):
+            carry, _ = body(carry, (xc[i], lc[i], mc[i]))
+        tot, cnt = carry
+    else:
+        (tot, cnt), _ = jax.lax.scan(
+            jax.checkpoint(body), (0.0, 0.0), (xc, lc, mc)
+        )
+    return tot / jnp.maximum(cnt, 1.0)

@@ -1,0 +1,191 @@
+"""Mixture-of-Experts FFN with expert parallelism over the ``model`` axis.
+
+Design (DESIGN.md SS6): GSPMD handles every dense layer well, but MoE
+dispatch (data-dependent sort/scatter) is exactly where auto-partitioning
+produces surprise all-gathers — so the routed path is an explicit
+``shard_map`` island inside the jitted model:
+
+  * tokens stay on their (pod, data) shard and are *replicated* across the
+    ``model`` axis (they already are, activation-wise, at this point);
+  * each model rank owns ``E / model_size`` experts and processes the
+    capacity-limited slice of local tokens routed to them (sort-based,
+    GShard-style position-in-expert capacity with drop);
+  * partial outputs are combined with one ``psum_scatter`` over ``model``
+    — the same wire cost as the row-parallel all-reduce a dense FFN of the
+    active width would pay, which is why EP here adds no collective-term
+    regression over the dense baseline (SSRoofline).
+
+Shared experts (qwen2-moe / deepseek-moe) are a plain dense MLP handled by
+GSPMD tensor parallelism outside the island.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.models.layers import activation, mlp_apply, mlp_init
+
+Array = jax.Array
+
+
+def moe_init(
+    rng,
+    d_model: int,
+    d_expert: int,
+    n_experts_padded: int,
+    n_shared: int,
+    act: str,
+) -> dict[str, Array]:
+    """Params sized for the *padded* expert count (EP divisibility)."""
+    ki = jax.nn.initializers.lecun_normal()
+    ks = jax.random.split(rng, 5)
+    ep = n_experts_padded
+    p = {
+        "router": ki(ks[0], (d_model, ep), jnp.float32),
+        "wi": ki(ks[1], (ep, d_model, d_expert), jnp.float32),
+        "wg": ki(ks[2], (ep, d_model, d_expert), jnp.float32),
+        "wo": ki(ks[3], (ep, d_expert, d_model), jnp.float32),
+    }
+    if n_shared:
+        p["shared"] = mlp_init(ks[4], d_model, n_shared * d_expert, act)
+    return p
+
+
+def _routed_local(
+    xt: Array,            # (T, d) local tokens
+    router: Array,        # (d, E_padded)
+    wi: Array,            # (El, d, f) local experts
+    wg: Array,
+    wo: Array,
+    *,
+    top_k: int,
+    n_real: int,          # real expert count (router is padded to E_padded)
+    capacity_factor: float,
+    act: str,
+    ep_axis: str,
+) -> tuple[Array, Array]:
+    """Per-device routed-expert computation (runs inside shard_map)."""
+    T, d = xt.shape
+    E = router.shape[1]
+    El = wi.shape[0]
+    rank = lax.axis_index(ep_axis)
+    e0 = rank * El
+
+    logits = (xt @ router.astype(xt.dtype)).astype(jnp.float32)   # (T, E)
+    if n_real < E:   # mask padding experts (clean EP divisibility)
+        pad_mask = jnp.arange(E) >= n_real
+        logits = jnp.where(pad_mask[None, :], -1e30, logits)
+    probs = jax.nn.softmax(logits, axis=-1)
+    w, ids = lax.top_k(probs, top_k)                              # (T, k)
+    w = w / jnp.maximum(jnp.sum(w, -1, keepdims=True), 1e-9)
+
+    flat_ids = ids.reshape(-1)                                    # (T*k,)
+    flat_w = w.reshape(-1)
+    order = jnp.argsort(flat_ids)
+    sids = flat_ids[order]
+    pos = jnp.arange(T * top_k) - jnp.searchsorted(sids, sids, side="left")
+    cap = int(math.ceil(T * top_k / n_real * capacity_factor))
+    local = (sids >= e0) & (sids < e0 + El) & (pos < cap)
+    dest = jnp.where(local, (sids - e0) * cap + pos, El * cap)    # drop row
+    src_tok = order // top_k
+
+    buf = jnp.zeros((El * cap + 1, d), xt.dtype)
+    buf = buf.at[dest].set(xt[src_tok], mode="drop")
+    eb = buf[: El * cap].reshape(El, cap, d)
+    h = jnp.einsum("ecd,edf->ecf", eb, wi.astype(xt.dtype))
+    g = jnp.einsum("ecd,edf->ecf", eb, wg.astype(xt.dtype))
+    h = activation(act)(g) * h
+    out = jnp.einsum("ecf,efd->ecd", h, wo.astype(xt.dtype))
+    out_flat = out.reshape(El * cap, d)
+
+    contrib = out_flat[jnp.minimum(dest, El * cap - 1)]
+    contrib = contrib * (flat_w[order] * local)[:, None].astype(xt.dtype)
+    y = jnp.zeros((T, d), xt.dtype).at[src_tok, :].add(contrib)
+    # combine partial expert outputs across the EP axis
+    y = lax.psum(y, ep_axis)
+
+    # aux losses (identical math on every EP rank): load balance + z-loss
+    me = jnp.mean(probs, axis=0)                                  # (E,)
+    one_hot_top1 = jax.nn.one_hot(ids[:, 0], E, dtype=jnp.float32)
+    ce = jnp.mean(one_hot_top1, axis=0)
+    aux = n_real * jnp.sum(me * ce) + 1e-3 * jnp.mean(
+        jax.nn.logsumexp(logits, -1) ** 2
+    )
+    return y, aux
+
+
+def moe_apply(
+    p: dict[str, Array],
+    x: Array,                      # (B, S, d)
+    *,
+    top_k: int,
+    n_real: int,
+    act: str,
+    mesh: Mesh | None,
+    capacity_factor: float = 1.25,
+    ep_axis: str = "model",
+    dp_axes: tuple[str, ...] = ("data",),
+    ctx=None,
+) -> tuple[Array, Array]:
+    """MoE FFN: shared experts (dense TP) + routed experts (shard_map EP).
+
+    Returns (output, aux_loss).  ``mesh`` may be None for unsharded unit
+    tests, in which case the routed path runs on a trivial local "mesh" of
+    the current device.
+    """
+    B, S, d = x.shape
+
+    routed = functools.partial(
+        _routed_local,
+        top_k=top_k,
+        n_real=n_real,
+        capacity_factor=capacity_factor,
+        act=act,
+        ep_axis=ep_axis,
+    )
+
+    if mesh is None:
+        import numpy as np
+        devs = np.array(jax.devices()[:1]).reshape(1, 1)
+        mesh = Mesh(devs, (dp_axes[0] if dp_axes else "data", ep_axis))
+
+    dp = tuple(a for a in dp_axes if a in mesh.axis_names)
+    # decode batches (B*S == 1) cannot shard over the data axes: fall back
+    # to replicated tokens inside the island (EP still splits the experts)
+    dp_size = 1
+    for a in dp:
+        dp_size *= mesh.shape[a]
+    if (B * S) % max(dp_size, 1):
+        dp = ()
+
+    def island(xt, r, wi, wg, wo):
+        y, aux = routed(xt, r, wi, wg, wo)
+        if dp:
+            aux = lax.pmean(aux, dp)   # make the scalar mesh-uniform
+        return y, aux
+
+    fn = jax.shard_map(
+        island,
+        mesh=mesh,
+        in_specs=(
+            P(dp, None),          # tokens: sharded over data axes
+            P(None, None),        # router replicated
+            P(ep_axis, None, None),
+            P(ep_axis, None, None),
+            P(ep_axis, None, None),
+        ),
+        out_specs=(P(dp, None), P()),
+        check_vma=False,
+    )
+    xt = x.reshape(B * S, d)
+    y, aux = fn(xt, p["router"], p["wi"], p["wg"], p["wo"])
+    y = y.reshape(B, S, d)
+    if "shared" in p:
+        y = y + mlp_apply(p["shared"], x, act, ctx=ctx)
+    return y, aux

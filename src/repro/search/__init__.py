@@ -1,0 +1,28 @@
+"""NN-DTW search engine: cascade pruning + exact verification."""
+
+from repro.search.cascade import CascadeConfig, bands_prefilter, compute_bounds
+from repro.search.distributed import make_distributed_search, shard_index
+from repro.search.engine import (
+    EngineConfig,
+    SearchResult,
+    brute_force,
+    classify,
+    nn_search,
+)
+from repro.search.index import DTWIndex, build_index, kim_features
+
+__all__ = [
+    "CascadeConfig",
+    "DTWIndex",
+    "EngineConfig",
+    "SearchResult",
+    "bands_prefilter",
+    "brute_force",
+    "build_index",
+    "classify",
+    "compute_bounds",
+    "kim_features",
+    "make_distributed_search",
+    "nn_search",
+    "shard_index",
+]

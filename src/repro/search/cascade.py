@@ -1,0 +1,133 @@
+"""Batched lower-bound cascade (TPU adaptation of UCR-suite cascading).
+
+The paper's NN-DTW loop abandons candidates one at a time; a TPU wants the
+same *work-skipping* expressed as dense tiers (DESIGN.md SS3):
+
+  tier 0  LB_KIM        O(1)/pair   from precomputed index features
+  tier 1  LB bands      O(V^2)/pair elastic bands only (Alg. 1 lines 1-11)
+  tier 2  LB_ENHANCED   O(L)/pair   fused bands + Keogh bridge kernel
+
+Every tier is a valid lower bound, so the *running elementwise max* of the
+computed tiers is the tightest available bound per pair.  The cascade
+returns that (Q, N) bound matrix; the engine (engine.py) then verifies
+ascending-bound candidates with banded DTW until exactness is certified.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.kernels import ref as kref
+from repro.kernels.ops import lb_enhanced_op
+from repro.search.index import DTWIndex, kim_features
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class CascadeConfig:
+    """Static configuration of the pruning cascade.
+
+    Attributes:
+      w: Sakoe-Chiba window.
+      v: LB_ENHANCED speed-tightness parameter (paper SS III-A); the paper's
+         recommended V=4 is the default.
+      use_kim: include the O(1) Kim tier.
+      candidate_chunk: candidates per fused-kernel invocation (VMEM tiling).
+      use_pallas: route tier 1/2 through the Pallas kernels (True) or the
+        pure-jnp references (False).  The jnp path is used when lowering the
+        distributed search for the multi-pod dry-run, where kernel dispatch
+        is orthogonal to the sharding being validated.
+    """
+
+    w: int
+    v: int = 4
+    use_kim: bool = True
+    candidate_chunk: int = 512
+    use_pallas: bool = True
+
+    def lb_fn(self):
+        return lb_enhanced_op if self.use_pallas else kref.lb_enhanced_ref
+
+
+def lb_kim_tier(q: Array, index: DTWIndex) -> Array:
+    """(Q, N) Kim bounds from precomputed features — O(1) per pair."""
+    qf, qok = kim_features(q)                        # (Q, 4), (Q, 2)
+    cf, cok = index.kim, index.kim_ok                # (N, 4), (N, 2)
+    d = qf[:, None, :] - cf[None, :, :]              # (Q, N, 4)
+    d = d * d
+    base = d[..., 0] + d[..., 1]
+    # witness interiority: the series with the more extreme extremum
+    q_mx, c_mx = qf[:, None, 2], cf[None, :, 2]
+    ok_max = jnp.where(q_mx >= c_mx, qok[:, None, 0], cok[None, :, 0])
+    t_max = jnp.where(ok_max, d[..., 2], 0.0)
+    q_mn, c_mn = qf[:, None, 3], cf[None, :, 3]
+    ok_min = jnp.where(q_mn <= c_mn, qok[:, None, 1], cok[None, :, 1])
+    t_min = jnp.where(ok_min, d[..., 3], 0.0)
+    return base + jnp.maximum(t_max, t_min)
+
+
+def _chunked(
+    fn, n: int, chunk: int
+):
+    """Map ``fn(start)`` over candidate chunks; concatenate on axis 1."""
+    outs = [fn(s) for s in range(0, n, chunk)]
+    return jnp.concatenate(outs, axis=1) if len(outs) > 1 else outs[0]
+
+
+def compute_bounds(q: Array, index: DTWIndex, cfg: CascadeConfig) -> Array:
+    """(Q, N) tightest-available lower bound for every (query, candidate).
+
+    Chunked over candidates so each fused-kernel call matches the VMEM
+    tiling documented in kernels/lb_enhanced.py.
+    """
+    n = index.n
+    chunk = min(cfg.candidate_chunk, n)
+    lb_fn = cfg.lb_fn()
+
+    def tier2(s: int) -> Array:
+        e = min(s + chunk, n)
+        return lb_fn(
+            q,
+            index.series[s:e],
+            index.upper[s:e],
+            index.lower[s:e],
+            cfg.w,
+            cfg.v,
+        )
+
+    lb = _chunked(tier2, n, chunk)
+    if cfg.use_kim:
+        lb = jnp.maximum(lb, lb_kim_tier(q, index))
+    return lb
+
+
+def bands_prefilter(q: Array, index: DTWIndex, cfg: CascadeConfig) -> Array:
+    """(Q, N) bands-only tier (Alg. 1 lines 1-11) — the cheap pre-bound.
+
+    Exposed separately so callers on real hardware can prune with it before
+    paying for the O(L) bridge; on the roofline it is ~V^2/L of tier 2.
+    """
+    n = index.n
+    chunk = min(cfg.candidate_chunk, n)
+    lb_fn = cfg.lb_fn()
+
+    def tier1(s: int) -> Array:
+        e = min(s + chunk, n)
+        return lb_fn(
+            q,
+            index.series[s:e],
+            index.upper[s:e],
+            index.lower[s:e],
+            cfg.w,
+            cfg.v,
+            bands_only=True,
+        )
+
+    return _chunked(tier1, n, chunk)

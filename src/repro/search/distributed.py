@@ -1,0 +1,108 @@
+"""Distributed NN-DTW search over a (pod, data, model) device mesh.
+
+Sharding contract (DESIGN.md SS6):
+  * the candidate store is sharded along its N axis over the *data* axes
+    (``('data',)`` single-pod, ``('pod', 'data')`` multi-pod) — this is the
+    axis that grows with corpus size, the paper's scaling bottleneck;
+  * the query batch is sharded over the *model* axis — queries are
+    independent, so this is embarrassing parallelism;
+  * each device runs the full cascade + verification engine on its local
+    shard, then the per-query top-k candidates are merged with a single
+    ``all_gather`` over the data axes (k * n_data_shards values per query —
+    tiny compared to the local work it summarises).
+
+The communication volume is O(Q * k * shards) floats per search step —
+independent of both N and L — so the collective roofline term stays
+negligible at any corpus size (quantified in EXPERIMENTS.md SSRoofline).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.search.cascade import CascadeConfig
+from repro.search.engine import EngineConfig, nn_search
+from repro.search.index import DTWIndex
+
+Array = jax.Array
+
+
+def _combined_axis_index(axes: Sequence[str]) -> Array:
+    idx = lax.axis_index(axes[0])
+    for a in axes[1:]:
+        idx = idx * lax.axis_size(a) + lax.axis_index(a)
+    return idx
+
+
+def make_distributed_search(
+    mesh: Mesh,
+    cfg: EngineConfig,
+    *,
+    data_axes: tuple[str, ...] = ("data",),
+    query_axis: str = "model",
+):
+    """Build a jittable distributed search step for ``mesh``.
+
+    Returns ``step(series, labels, upper, lower, kim, kim_ok, queries)``
+    mapping sharded index leaves + queries to ``(dists, idx, n_dtw)`` with
+    the query axis sharded over ``query_axis``.  Candidate indices in the
+    output are *global* (shard offset applied).
+    """
+    axes = tuple(data_axes)
+
+    def local_step(series, labels, upper, lower, kim, kim_ok, queries):
+        index = DTWIndex(
+            series=series, labels=labels, upper=upper, lower=lower,
+            kim=kim, kim_ok=kim_ok, w=cfg.cascade.w,
+        )
+        res = nn_search(index, queries, cfg)
+        n_local = series.shape[0]
+        gidx = res.idx + (_combined_axis_index(axes) * n_local).astype(jnp.int32)
+        # merge local top-k across the data axes
+        d_all = lax.all_gather(res.dists, axes)        # (D, Qloc, k)
+        i_all = lax.all_gather(gidx, axes)
+        d_flat = jnp.moveaxis(d_all, 0, 1).reshape(res.dists.shape[0], -1)
+        i_flat = jnp.moveaxis(i_all, 0, 1).reshape(res.dists.shape[0], -1)
+        k = res.dists.shape[1]
+        neg, sel = lax.top_k(-d_flat, k)
+        merged_d = -neg
+        merged_i = jnp.take_along_axis(i_flat, sel, axis=1)
+        n_dtw = lax.psum(res.n_dtw, axes)
+        return merged_d, merged_i, n_dtw
+
+    in_specs = (
+        P(axes, None),   # series      (N, L)  sharded on N
+        P(axes),         # labels      (N,)
+        P(axes, None),   # upper       (N, L)
+        P(axes, None),   # lower       (N, L)
+        P(axes, None),   # kim         (N, 4)
+        P(axes, None),   # kim_ok      (N, 2)
+        P(query_axis, None),  # queries (Q, L) sharded on Q
+    )
+    out_specs = (P(query_axis, None), P(query_axis, None), P(query_axis))
+    return jax.shard_map(
+        local_step, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        check_vma=False,
+    )
+
+
+def shard_index(mesh: Mesh, index: DTWIndex, data_axes=("data",)) -> DTWIndex:
+    """Device-put an index with its N axis sharded over the data axes."""
+    axes = tuple(data_axes)
+    row = NamedSharding(mesh, P(axes, None))
+    vec = NamedSharding(mesh, P(axes))
+    return DTWIndex(
+        series=jax.device_put(index.series, row),
+        labels=jax.device_put(index.labels, vec),
+        upper=jax.device_put(index.upper, row),
+        lower=jax.device_put(index.lower, row),
+        kim=jax.device_put(index.kim, row),
+        kim_ok=jax.device_put(index.kim_ok, row),
+        w=index.w,
+    )

@@ -1,0 +1,95 @@
+"""Candidate-store index for lower-bounded NN-DTW search.
+
+The index precomputes everything that depends only on the store and the
+window ``w`` (paper SS II-B: envelopes are query-independent, so an index
+amortises them across every query): the Sakoe-Chiba envelopes and the O(1)
+Kim feature vector of every candidate.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.distances import znorm
+from repro.kernels.ops import envelope_op
+
+Array = jax.Array
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class DTWIndex:
+    """Immutable candidate store + per-candidate precomputation.
+
+    Attributes:
+      series:  (N, L) candidate series (z-normalised if built with znorm).
+      labels:  (N,) int labels (or -1s when unlabelled).
+      upper:   (N, L) upper envelopes for window ``w``.
+      lower:   (N, L) lower envelopes.
+      kim:     (N, 4) [first, last, max, min] Kim features.
+      kim_ok:  (N, 2) feature-admissibility flags [max interior, min interior].
+      w:       static window the envelopes were built for.
+    """
+
+    series: Array
+    labels: Array
+    upper: Array
+    lower: Array
+    kim: Array
+    kim_ok: Array
+    w: int = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def n(self) -> int:
+        return self.series.shape[0]
+
+    @property
+    def length(self) -> int:
+        return self.series.shape[1]
+
+
+def kim_features(x: Array) -> tuple[Array, Array]:
+    """Per-series Kim features + interior-witness flags (see lb_kim)."""
+    L = x.shape[-1]
+    first = x[..., 0]
+    last = x[..., -1]
+    mx = jnp.max(x, -1)
+    mn = jnp.min(x, -1)
+    imax = jnp.argmax(x, -1)
+    imin = jnp.argmin(x, -1)
+    feats = jnp.stack([first, last, mx, mn], axis=-1)
+    ok = jnp.stack(
+        [(imax != 0) & (imax != L - 1), (imin != 0) & (imin != L - 1)],
+        axis=-1,
+    )
+    return feats, ok
+
+
+def build_index(
+    series: Array,
+    w: int,
+    labels: Array | None = None,
+    *,
+    normalize: bool = False,
+) -> DTWIndex:
+    """Build a ``DTWIndex`` for window ``w``."""
+    series = jnp.asarray(series, jnp.float32)
+    if normalize:
+        series = znorm(series)
+    if labels is None:
+        labels = jnp.full((series.shape[0],), -1, jnp.int32)
+    u, lo = envelope_op(series, w)
+    kim, kim_ok = kim_features(series)
+    return DTWIndex(
+        series=series,
+        labels=jnp.asarray(labels, jnp.int32),
+        upper=u,
+        lower=lo,
+        kim=kim,
+        kim_ok=kim_ok,
+        w=w,
+    )

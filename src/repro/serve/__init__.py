@@ -1,0 +1,5 @@
+"""Serving substrate: batched autoregressive decode on top of LM caches."""
+
+from repro.serve.decode import DecodeSession, greedy_decode
+
+__all__ = ["DecodeSession", "greedy_decode"]

@@ -1,0 +1,21 @@
+"""Training substrate: optimizers, train step, checkpointing."""
+
+from repro.train.checkpoint import (
+    latest_step,
+    restore_checkpoint,
+    save_checkpoint,
+)
+from repro.train.optimizer import OptConfig, opt_init, opt_update
+from repro.train.trainer import TrainState, init_state, make_train_step
+
+__all__ = [
+    "OptConfig",
+    "TrainState",
+    "init_state",
+    "latest_step",
+    "make_train_step",
+    "opt_init",
+    "opt_update",
+    "restore_checkpoint",
+    "save_checkpoint",
+]

@@ -1,0 +1,128 @@
+"""Fault-tolerant checkpointing: atomic, portable, reshard-on-restore.
+
+Format: one directory per step containing
+  * ``manifest.json`` — step, mesh shape, rng, data-pipeline cursor, and the
+    flattened tree structure with per-leaf dtype/shape;
+  * ``arrays.npz`` — the leaves (gathered to host).
+
+Guarantees needed at 1000+ nodes (DESIGN.md SS6):
+  * **atomicity**: written to ``<dir>.tmp`` then ``os.rename``d — a job
+    killed mid-write can never leave a half checkpoint that restore picks;
+  * **elasticity**: restore takes the *current* mesh + shardings and
+    device_puts each leaf accordingly — the saving and restoring meshes may
+    differ (elastic scale-up/down, straggler-evicted hosts);
+  * **retention**: ``keep`` newest checkpoints are retained, best-effort GC.
+
+On a real multi-host pod the np.asarray gather becomes a per-host shard
+write (tensorstore-style); the single-host container exercises the same
+code path end to end.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import shutil
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+def _flatten_with_names(tree: Any) -> tuple[list[tuple[str, Any]], Any]:
+    flat, tdef = jax.tree_util.tree_flatten_with_path(tree)
+    named = [(jax.tree_util.keystr(path), leaf) for path, leaf in flat]
+    return named, tdef
+
+
+def save_checkpoint(
+    directory: str,
+    step: int,
+    state: Any,
+    *,
+    extra: dict[str, Any] | None = None,
+    keep: int = 3,
+) -> str:
+    """Atomically write ``state`` (any pytree) for ``step``."""
+    os.makedirs(directory, exist_ok=True)
+    final = os.path.join(directory, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    named, _ = _flatten_with_names(state)
+    arrays = {f"a{i}": np.asarray(leaf) for i, (_, leaf) in enumerate(named)}
+    np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+    manifest = {
+        "step": step,
+        "names": [n for n, _ in named],
+        "shapes": [list(np.shape(l)) for _, l in named],
+        "dtypes": [str(np.asarray(l).dtype) for _, l in named],
+        "extra": extra or {},
+    }
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)                     # atomic publish
+    _gc(directory, keep)
+    return final
+
+
+def _gc(directory: str, keep: int) -> None:
+    ckpts = sorted(
+        d for d in os.listdir(directory)
+        if d.startswith("step_") and not d.endswith(".tmp")
+    )
+    for d in ckpts[:-keep] if keep else []:
+        shutil.rmtree(os.path.join(directory, d), ignore_errors=True)
+
+
+def latest_step(directory: str) -> int | None:
+    if not os.path.isdir(directory):
+        return None
+    steps = [
+        int(d.split("_")[1])
+        for d in os.listdir(directory)
+        if d.startswith("step_") and not d.endswith(".tmp")
+    ]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(
+    directory: str,
+    state_like: Any,
+    *,
+    step: int | None = None,
+    shardings: Any | None = None,
+) -> tuple[Any, dict[str, Any]]:
+    """Restore into the structure of ``state_like``; reshard if ``shardings``
+    (a matching pytree of NamedSharding) is given — the elastic-restart path.
+    """
+    step = step if step is not None else latest_step(directory)
+    if step is None:
+        raise FileNotFoundError(f"no checkpoint in {directory}")
+    path = os.path.join(directory, f"step_{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(path, "arrays.npz"))
+    named, tdef = _flatten_with_names(state_like)
+    saved_names = manifest["names"]
+    assert [n for n, _ in named] == saved_names, "tree structure mismatch"
+    leaves = []
+    shard_leaves = (
+        jax.tree_util.tree_leaves(shardings) if shardings is not None else None
+    )
+    for i, (name, like) in enumerate(named):
+        arr = data[f"a{i}"]
+        if hasattr(like, "dtype"):
+            arr = arr.astype(like.dtype)
+        if shard_leaves is not None:
+            leaves.append(jax.device_put(arr, shard_leaves[i]))
+        else:
+            leaves.append(jnp.asarray(arr))
+    return jax.tree_util.tree_unflatten(tdef, leaves), manifest["extra"]

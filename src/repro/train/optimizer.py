@@ -1,0 +1,156 @@
+"""Optimizers: AdamW and (factored) Adafactor, pytree-native.
+
+AdamW is the default.  Adafactor (factored second moment, no first moment)
+is selected for the very largest archs (jamba-398b) where Adam's 8 bytes of
+state per parameter cannot fit a 256-chip pod (DESIGN.md SS6) — the
+PaLM/T5 production trade-off.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    name: str = "adamw"              # "adamw" | "adafactor"
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    grad_clip: float = 1.0
+    warmup: int = 100
+
+
+def _lr_at(cfg: OptConfig, step: Array) -> Array:
+    warm = jnp.minimum(1.0, (step + 1) / max(cfg.warmup, 1))
+    return cfg.lr * warm
+
+
+def global_norm(tree: Any) -> Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+
+
+def clip_by_global_norm(tree: Any, max_norm: float) -> tuple[Any, Array]:
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree.map(lambda g: g * scale, tree), norm
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+def adamw_init(params: Any) -> dict[str, Any]:
+    zeros = lambda p: jnp.zeros_like(p, dtype=jnp.float32)
+    return {"mu": jax.tree.map(zeros, params), "nu": jax.tree.map(zeros, params)}
+
+
+def adamw_update(
+    params: Any, grads: Any, state: dict[str, Any], cfg: OptConfig, step: Array
+) -> tuple[Any, dict[str, Any]]:
+    lr = _lr_at(cfg, step)
+    t = (step + 1).astype(jnp.float32)
+    c1 = 1.0 - cfg.b1 ** t
+    c2 = 1.0 - cfg.b2 ** t
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32)
+        m = cfg.b1 * m + (1 - cfg.b1) * g
+        v = cfg.b2 * v + (1 - cfg.b2) * g * g
+        u = (m / c1) / (jnp.sqrt(v / c2) + cfg.eps)
+        wd = cfg.weight_decay * p.astype(jnp.float32) if p.ndim >= 2 else 0.0
+        newp = p.astype(jnp.float32) - lr * (u + wd)
+        return newp.astype(p.dtype), m, v
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state["mu"])
+    flat_v = jax.tree.leaves(state["nu"])
+    outs = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree.unflatten(tdef, [o[0] for o in outs])
+    new_m = jax.tree.unflatten(tdef, [o[1] for o in outs])
+    new_v = jax.tree.unflatten(tdef, [o[2] for o in outs])
+    return new_p, {"mu": new_m, "nu": new_v}
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moment, momentum-free)
+# ---------------------------------------------------------------------------
+
+def adafactor_init(params: Any) -> dict[str, Any]:
+    def stats(p):
+        if p.ndim >= 2:
+            return {
+                "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+            }
+        return {"v": jnp.zeros_like(p, dtype=jnp.float32)}
+
+    return {"stats": jax.tree.map(stats, params, is_leaf=lambda x: isinstance(x, jax.Array) or hasattr(x, "shape"))}
+
+
+def adafactor_update(
+    params: Any, grads: Any, state: dict[str, Any], cfg: OptConfig, step: Array
+) -> tuple[Any, dict[str, Any]]:
+    lr = _lr_at(cfg, step)
+    beta2 = 1.0 - (step + 1.0) ** -0.8     # schedule from the paper
+    eps = 1e-30
+
+    def upd(p, g, st):
+        g = g.astype(jnp.float32)
+        g2 = g * g + eps
+        if p.ndim >= 2:
+            vr = beta2 * st["vr"] + (1 - beta2) * jnp.mean(g2, axis=-1)
+            vc = beta2 * st["vc"] + (1 - beta2) * jnp.mean(g2, axis=-2)
+            rfac = vr / jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True), eps)
+            v = rfac[..., None] * vc[..., None, :]
+            nst = {"vr": vr, "vc": vc}
+        else:
+            v = beta2 * st["v"] + (1 - beta2) * g2
+            nst = {"v": v}
+        u = g / jnp.sqrt(jnp.maximum(v, eps))
+        # update clipping (RMS <= 1) per the Adafactor paper
+        rms = jnp.sqrt(jnp.mean(u * u))
+        u = u / jnp.maximum(1.0, rms)
+        wd = cfg.weight_decay * p.astype(jnp.float32) if p.ndim >= 2 else 0.0
+        newp = p.astype(jnp.float32) - lr * (u + wd)
+        return newp.astype(p.dtype), nst
+
+    flat_p, tdef = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    stats_list = tdef.flatten_up_to(state["stats"])
+    outs = [upd(p, g, s) for p, g, s in zip(flat_p, flat_g, stats_list)]
+    new_p = jax.tree.unflatten(tdef, [o[0] for o in outs])
+    new_s = jax.tree.unflatten(tdef, [o[1] for o in outs])
+    return new_p, {"stats": new_s}
+
+
+# ---------------------------------------------------------------------------
+
+def opt_init(params: Any, cfg: OptConfig) -> dict[str, Any]:
+    if cfg.name == "adamw":
+        return adamw_init(params)
+    if cfg.name == "adafactor":
+        return adafactor_init(params)
+    raise ValueError(cfg.name)
+
+
+def opt_update(
+    params: Any, grads: Any, state: dict[str, Any], cfg: OptConfig, step: Array
+) -> tuple[Any, dict[str, Any]]:
+    if cfg.grad_clip:
+        grads, _ = clip_by_global_norm(grads, cfg.grad_clip)
+    if cfg.name == "adamw":
+        return adamw_update(params, grads, state, cfg, step)
+    if cfg.name == "adafactor":
+        return adafactor_update(params, grads, state, cfg, step)
+    raise ValueError(cfg.name)

@@ -1,0 +1,105 @@
+"""Training loop: train-step builder, gradient accumulation, compression.
+
+The step is a pure jittable function; distribution comes from the shardings
+attached to its inputs (launch/dryrun.py, launch/train.py).  Gradient
+accumulation scans microbatches and averages grads *before* the optimizer
+(compute/comm overlap: with DP over (pod, data), GSPMD schedules the
+cross-replica reduce of each microbatch's grads concurrently with the next
+microbatch's backward).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.distributed.compression import CompressionConfig, compress_grads
+from repro.models.model import LM
+from repro.train.optimizer import OptConfig, opt_init, opt_update
+
+Array = jax.Array
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class TrainState:
+    step: Array
+    params: Any
+    opt: Any
+    err: Any = None          # error-feedback state for compressed grads
+
+
+def init_state(model: LM, rng, opt_cfg: OptConfig,
+               comp: CompressionConfig | None = None) -> TrainState:
+    params = model.init(rng)
+    opt = opt_init(params, opt_cfg)
+    err = (
+        jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+        if comp is not None and comp.error_feedback
+        else None
+    )
+    return TrainState(step=jnp.zeros((), jnp.int32), params=params, opt=opt, err=err)
+
+
+def make_train_step(
+    model: LM,
+    opt_cfg: OptConfig,
+    *,
+    grad_accum: int = 1,
+    compression: CompressionConfig | None = None,
+) -> Callable[[TrainState, dict[str, Array]], tuple[TrainState, dict[str, Array]]]:
+    """Build ``train_step(state, batch) -> (state, metrics)``.
+
+    ``batch`` leaves have leading dim ``global_batch``; with grad_accum > 1
+    they are reshaped to (accum, global_batch / accum, ...) and scanned.
+    """
+
+    def loss_of(params, mb):
+        loss, metrics = model.loss_fn(params, mb)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_of, has_aux=True)
+
+    def train_step(state: TrainState, batch: dict[str, Array]):
+        if grad_accum > 1:
+            def split(x):
+                return x.reshape((grad_accum, x.shape[0] // grad_accum) + x.shape[1:])
+
+            mbs = jax.tree.map(split, batch)
+
+            def acc_body(carry, mb):
+                gacc, lacc = carry
+                (loss, _), grads = grad_fn(state.params, mb)
+                gacc = jax.tree.map(jnp.add, gacc, grads)
+                return (gacc, lacc + loss), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params
+            )
+            (gsum, lsum), _ = lax.scan(acc_body, (zeros, 0.0), mbs)
+            grads = jax.tree.map(lambda g: g / grad_accum, gsum)
+            loss = lsum / grad_accum
+            metrics = {"ce": loss, "aux": jnp.zeros(())}
+        else:
+            (loss, metrics), grads = grad_fn(state.params, batch)
+
+        err = state.err
+        if compression is not None:
+            grads, err = compress_grads(grads, err, compression)
+
+        params, opt = opt_update(
+            state.params, grads, state.opt, opt_cfg, state.step
+        )
+        new_state = TrainState(
+            step=state.step + 1, params=params, opt=opt, err=err
+        )
+        metrics = dict(metrics)
+        metrics["loss"] = loss
+        return new_state, metrics
+
+    return train_step

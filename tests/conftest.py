@@ -1,0 +1,11 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here on purpose — smoke tests and
+benches must see the real single CPU device; only launch/dryrun.py forces
+512 host devices (and tests that need a mesh spawn subprocesses)."""
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,114 @@
+"""Attention correctness: flash vs naive, masks, GQA, caches, RoPE."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.attention import (
+    attn_apply,
+    attn_init,
+    flash_attention,
+    init_cache,
+)
+from repro.models.layers import apply_mrope, apply_rope
+
+
+def naive_attention(q, k, v, q_pos, kv_pos, causal=True, window=None,
+                    score_cap=None, kv_valid=None):
+    B, Sq, Hq, D = q.shape
+    _, Skv, Hkv, _ = k.shape
+    g = Hq // Hkv
+    qf = q.astype(jnp.float32).reshape(B, Sq, Hkv, g, D)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qf, k.astype(jnp.float32)) * D**-0.5
+    if score_cap is not None:
+        s = score_cap * jnp.tanh(s / score_cap)
+    ok = jnp.ones((B, 1, 1, Sq, Skv), bool)
+    dp = q_pos[:, None, None, :, None] - kv_pos[:, None, None, None, :]
+    if causal:
+        ok = ok & (dp >= 0)
+    if window is not None:
+        ok = ok & (dp < window)
+    if kv_valid is not None:
+        ok = ok & kv_valid[:, None, None, None, :]
+    s = jnp.where(ok, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bhgqd", p, v.astype(jnp.float32))
+    return o.transpose(0, 3, 1, 2, 4).reshape(B, Sq, Hq, D)
+
+
+@pytest.mark.parametrize("Hq,Hkv", [(4, 4), (8, 2), (6, 1)])
+@pytest.mark.parametrize("causal,window,cap", [
+    (True, None, None), (True, 5, None), (False, None, None), (True, None, 30.0),
+])
+def test_flash_matches_naive(rng, Hq, Hkv, causal, window, cap):
+    B, S, D = 2, 17, 8
+    q = jnp.array(rng.normal(size=(B, S, Hq, D)).astype(np.float32))
+    k = jnp.array(rng.normal(size=(B, S, Hkv, D)).astype(np.float32))
+    v = jnp.array(rng.normal(size=(B, S, Hkv, D)).astype(np.float32))
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    got = flash_attention(q, k, v, pos, pos, causal=causal, window=window,
+                          score_cap=cap, kv_chunk=5)
+    want = naive_attention(q, k, v, pos, pos, causal=causal, window=window,
+                           score_cap=cap)
+    np.testing.assert_allclose(np.array(got), np.array(want), rtol=2e-3, atol=2e-3)
+
+
+def test_decode_matches_prefill(rng):
+    """Teacher-forcing consistency: attending step-by-step through a cache
+    must equal full self-attention."""
+    B, S, H, Hkv, D, d = 2, 10, 4, 2, 8, 32
+    p = attn_init(jax.random.PRNGKey(0), d, H, Hkv, D)
+    x = jnp.array(rng.normal(size=(B, S, d)).astype(np.float32))
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    full, _ = attn_apply(p, x, pos, n_heads=H, n_kv_heads=Hkv, d_head=D,
+                         kv_chunk=4)
+    cache = init_cache(B, S, Hkv, D, dtype=jnp.float32)
+    outs = []
+    for t in range(S):
+        o, cache = attn_apply(
+            p, x[:, t : t + 1], pos[:, t : t + 1],
+            n_heads=H, n_kv_heads=Hkv, d_head=D,
+            cache=cache, cache_index=jnp.int32(t), kv_chunk=4,
+        )
+        outs.append(o)
+    step = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.array(full), np.array(step), rtol=2e-3, atol=2e-3)
+
+
+def test_rope_relative_shift_invariance(rng):
+    """RoPE dot products depend only on relative positions."""
+    B, S, H, D = 1, 6, 2, 8
+    q = jnp.array(rng.normal(size=(B, S, H, D)).astype(np.float32))
+    k = jnp.array(rng.normal(size=(B, S, H, D)).astype(np.float32))
+    p0 = jnp.arange(S)[None, :]
+    p7 = p0 + 7
+    s0 = jnp.einsum("bqhd,bkhd->bhqk", apply_rope(q, p0), apply_rope(k, p0))
+    s7 = jnp.einsum("bqhd,bkhd->bhqk", apply_rope(q, p7), apply_rope(k, p7))
+    np.testing.assert_allclose(np.array(s0), np.array(s7), rtol=1e-3, atol=1e-4)
+
+
+def test_mrope_equals_rope_for_text(rng):
+    """When t == h == w (text tokens), M-RoPE must reduce to plain RoPE."""
+    B, S, H, D = 2, 5, 2, 16
+    x = jnp.array(rng.normal(size=(B, S, H, D)).astype(np.float32))
+    pos1 = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    pos3 = jnp.broadcast_to(jnp.arange(S)[None, None], (B, 3, S))
+    a = apply_rope(x, pos1)
+    b = apply_mrope(x, pos3, (2, 3, 3))
+    np.testing.assert_allclose(np.array(a), np.array(b), rtol=1e-4, atol=1e-5)
+
+
+def test_sliding_window_blocks_far_tokens(rng):
+    """A key outside the window must not influence the query."""
+    B, S, H, D, d = 1, 12, 2, 8, 16
+    p = attn_init(jax.random.PRNGKey(1), d, H, H, D)
+    x = jnp.array(rng.normal(size=(B, S, d)).astype(np.float32))
+    pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    base, _ = attn_apply(p, x, pos, n_heads=H, n_kv_heads=H, d_head=D,
+                         window=3, kv_chunk=4)
+    x2 = x.at[:, 0].add(100.0)   # outside window of the last query
+    pert, _ = attn_apply(p, x2, pos, n_heads=H, n_kv_heads=H, d_head=D,
+                         window=3, kv_chunk=4)
+    np.testing.assert_allclose(np.array(base[:, -1]), np.array(pert[:, -1]),
+                               rtol=1e-3, atol=1e-3)

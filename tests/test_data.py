@@ -1,0 +1,40 @@
+"""Data-substrate tests."""
+
+import numpy as np
+
+from repro.data import make_dataset, random_pairs
+
+
+def test_dataset_shapes_and_norms():
+    ds = make_dataset(n_classes=3, n_train_per_class=5, n_test_per_class=2,
+                      length=32, seed=0)
+    assert ds.x_train.shape == (15, 32)
+    assert ds.x_test.shape == (6, 32)
+    assert ds.n_classes == 3
+    np.testing.assert_allclose(ds.x_train.mean(axis=1), 0.0, atol=1e-4)
+    np.testing.assert_allclose(ds.x_train.std(axis=1), 1.0, atol=1e-2)
+    assert set(np.unique(ds.y_train)) == {0, 1, 2}
+
+
+def test_dataset_deterministic():
+    a = make_dataset(seed=4, length=16, n_train_per_class=3, n_test_per_class=1)
+    b = make_dataset(seed=4, length=16, n_train_per_class=3, n_test_per_class=1)
+    np.testing.assert_array_equal(a.x_train, b.x_train)
+
+
+def test_dataset_classes_separable():
+    """Different class prototypes should make same-class pairs closer on
+    average than cross-class pairs (Euclidean proxy)."""
+    ds = make_dataset(n_classes=2, n_train_per_class=20, n_test_per_class=1,
+                      length=64, warp=0.3, noise=0.1, seed=2)
+    x, y = ds.x_train, ds.y_train
+    d = ((x[:, None, :] - x[None, :, :]) ** 2).sum(-1)
+    same = d[y[:, None] == y[None, :]]
+    diff = d[y[:, None] != y[None, :]]
+    assert same.mean() < diff.mean()
+
+
+def test_random_pairs():
+    a, b = random_pairs(10, 64, seed=1)
+    assert a.shape == b.shape == (10, 64)
+    np.testing.assert_allclose(a.mean(axis=1), 0.0, atol=1e-4)

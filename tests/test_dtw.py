@@ -1,0 +1,66 @@
+"""DTW correctness against the loop-based paper-equation oracle."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import cost_matrix, dtw, dtw_batch, dtw_pairs, oracle
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+
+def _series(rng, L):
+    return rng.normal(size=L).astype(np.float32)
+
+
+@pytest.mark.parametrize("L,w", [(8, 2), (16, 0), (16, 16), (33, 7), (64, 20)])
+def test_dtw_matches_oracle(rng, L, w):
+    a, b = _series(rng, L), _series(rng, L)
+    assert np.allclose(float(dtw(jnp.array(a), jnp.array(b), w)),
+                       oracle.dtw(a, b, w), rtol=1e-4)
+
+
+def test_dtw_w0_is_squared_euclidean(rng):
+    a, b = _series(rng, 32), _series(rng, 32)
+    assert np.allclose(float(dtw(jnp.array(a), jnp.array(b), 0)),
+                       float(np.sum((a - b) ** 2)), rtol=1e-4)
+
+
+def test_dtw_identity_is_zero(rng):
+    a = _series(rng, 40)
+    assert float(dtw(jnp.array(a), jnp.array(a), 5)) == pytest.approx(0.0, abs=1e-5)
+
+
+def test_cost_matrix_corner_equals_dtw(rng):
+    a, b = _series(rng, 24), _series(rng, 24)
+    cm = cost_matrix(jnp.array(a), jnp.array(b), 6)
+    assert np.allclose(float(cm[-1, -1]), oracle.dtw(a, b, 6), rtol=1e-4)
+
+
+@given(
+    L=st.integers(4, 24),
+    w1=st.integers(0, 24),
+    w2=st.integers(0, 24),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_dtw_monotone_in_window(L, w1, w2, seed):
+    """Widening the window can only lower (or keep) the DTW value."""
+    rng = np.random.default_rng(seed)
+    a, b = _series(rng, L), _series(rng, L)
+    lo, hi = min(w1, w2), max(w1, w2)
+    d_lo = float(dtw(jnp.array(a), jnp.array(b), lo))
+    d_hi = float(dtw(jnp.array(a), jnp.array(b), hi))
+    assert d_hi <= d_lo * (1 + 1e-5) + 1e-6
+
+
+def test_batch_and_pairs_consistent(rng):
+    a = rng.normal(size=(3, 20)).astype(np.float32)
+    b = rng.normal(size=(5, 20)).astype(np.float32)
+    m = np.array(dtw_pairs(jnp.array(a), jnp.array(b), 4))
+    for i in range(3):
+        for j in range(5):
+            assert np.allclose(m[i, j], oracle.dtw(a[i], b[j], 4), rtol=1e-4)
+    d = np.array(dtw_batch(jnp.array(a), jnp.array(a), 4))
+    assert np.allclose(d, 0.0, atol=1e-5)

@@ -1,0 +1,42 @@
+"""Envelope correctness: prefix-doubling vs the windowed-min/max oracle."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import envelope, envelope_naive, oracle
+
+settings.register_profile("ci", max_examples=30, deadline=None)
+settings.load_profile("ci")
+
+
+@pytest.mark.parametrize("L,w", [(8, 1), (16, 0), (16, 16), (33, 7), (100, 99), (5, 2)])
+def test_envelope_matches_oracle(rng, L, w):
+    b = rng.normal(size=L).astype(np.float32)
+    u, lo = envelope(jnp.array(b), w)
+    uo, loo = oracle.envelope(b, w)
+    assert np.allclose(np.array(u), uo)
+    assert np.allclose(np.array(lo), loo)
+
+
+@given(L=st.integers(2, 64), w=st.integers(0, 64), seed=st.integers(0, 2**31 - 1))
+def test_envelope_property(L, w, seed):
+    rng = np.random.default_rng(seed)
+    b = rng.normal(size=L).astype(np.float32)
+    u, lo = envelope(jnp.array(b), w)
+    un, lon = envelope_naive(jnp.array(b), w)
+    assert np.allclose(np.array(u), np.array(un))
+    assert np.allclose(np.array(lo), np.array(lon))
+    # envelopes bracket the series and widen with w
+    assert np.all(np.array(u) >= b - 1e-6)
+    assert np.all(np.array(lo) <= b + 1e-6)
+
+
+def test_envelope_batched(rng):
+    b = rng.normal(size=(7, 33)).astype(np.float32)
+    u, lo = envelope(jnp.array(b), 5)
+    for i in range(7):
+        uo, loo = oracle.envelope(b[i], 5)
+        assert np.allclose(np.array(u[i]), uo)
+        assert np.allclose(np.array(lo[i]), loo)

@@ -1,0 +1,92 @@
+"""Sharding-rule invariants: every param/cache spec divides its dim for
+every arch on the production mesh shape (checked structurally against a
+mesh stub — no devices needed)."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs.base import SHAPES
+from repro.configs.registry import ARCHS
+from repro.distributed.sharding import AxisRules, param_spec
+from repro.models.model import LM
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshStub:
+    axis_names: tuple
+    _shape: dict
+
+    @property
+    def shape(self):
+        return self._shape
+
+
+SINGLE = MeshStub(("data", "model"), {"data": 16, "model": 16})
+MULTI = MeshStub(("pod", "data", "model"), {"pod": 2, "data": 16, "model": 16})
+
+
+def _axis_product(mesh, entry):
+    if entry is None:
+        return 1
+    total = 1
+    for a in entry if isinstance(entry, tuple) else (entry,):
+        total *= mesh.shape[a]
+    return total
+
+
+@pytest.mark.parametrize("mesh", [SINGLE, MULTI], ids=["single", "multi"])
+@pytest.mark.parametrize("name", sorted(ARCHS))
+def test_param_specs_divide(name, mesh):
+    cfg = ARCHS[name]
+    rules = AxisRules.for_mesh(mesh) if hasattr(AxisRules, "for_mesh") else AxisRules()
+    rules = AxisRules(dp=("pod", "data")) if "pod" in mesh.axis_names else AxisRules()
+    model = LM(cfg=cfg, mesh=None)
+    shapes = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    flat = jax.tree_util.tree_flatten_with_path(shapes)[0]
+    for path, leaf in flat:
+        spec = param_spec(cfg, mesh, rules, path, leaf)
+        assert len(spec) == leaf.ndim
+        for dim, entry in zip(leaf.shape, spec):
+            size = _axis_product(mesh, entry)
+            assert dim % size == 0, (name, path, leaf.shape, spec)
+
+
+@pytest.mark.parametrize("name", sorted(ARCHS))
+def test_no_param_axis_double_booked(name):
+    """A mesh axis may appear at most once in any leaf's PartitionSpec."""
+    cfg = ARCHS[name]
+    rules = AxisRules()
+    model = LM(cfg=cfg, mesh=None)
+    shapes = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    flat = jax.tree_util.tree_flatten_with_path(shapes)[0]
+    for path, leaf in flat:
+        spec = param_spec(cfg, SINGLE, rules, path, leaf)
+        seen = []
+        for entry in spec:
+            for a in (entry if isinstance(entry, tuple) else (entry,)):
+                if a is not None:
+                    assert a not in seen, (name, path, spec)
+                    seen.append(a)
+
+
+@pytest.mark.parametrize("name", sorted(ARCHS))
+def test_big_leaves_are_sharded(name):
+    """Every leaf >= 8 MB must shard on at least one axis (memory hygiene:
+    nothing big may silently replicate 256 ways)."""
+    cfg = ARCHS[name]
+    rules = AxisRules()
+    model = LM(cfg=cfg, mesh=None)
+    shapes = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    flat = jax.tree_util.tree_flatten_with_path(shapes)[0]
+    for path, leaf in flat:
+        nbytes = leaf.size * 4
+        if nbytes < 8 * 2**20:
+            continue
+        spec = param_spec(cfg, SINGLE, rules, path, leaf)
+        total = 1
+        for entry in spec:
+            total *= _axis_product(SINGLE, entry)
+        assert total > 1, (name, jax.tree_util.keystr(path), leaf.shape)

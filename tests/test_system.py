@@ -1,0 +1,78 @@
+"""End-to-end system tests: the paper's pipeline and the LM substrate."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data import make_dataset
+from repro.search import CascadeConfig, EngineConfig, build_index, classify
+
+
+def test_nn_dtw_classification_end_to_end():
+    """The paper's headline pipeline: envelopes -> cascade -> verified
+    NN-DTW classification, with real pruning and high accuracy."""
+    ds = make_dataset(n_classes=4, n_train_per_class=25, n_test_per_class=6,
+                      length=96, seed=11)
+    w = int(0.1 * ds.length)
+    idx = build_index(ds.x_train, w, ds.y_train)
+    cfg = EngineConfig(cascade=CascadeConfig(w=w, v=4), verify_chunk=16, k=1)
+    pred, res = classify(idx, ds.x_test, cfg)
+    acc = float(np.mean(np.array(pred) == ds.y_test))
+    prune = float(np.mean(np.array(res.pruning_power())))
+    assert acc >= 0.75, f"accuracy {acc}"
+    assert prune >= 0.3, f"pruning power {prune}"
+
+
+def test_lb_enhanced_tightness_dominates_keogh_in_aggregate():
+    """Fig. 1 qualitative claim: mean tightness ENHANCED^4 > KEOGH."""
+    from repro.core import dtw_pairs, envelope, lb_enhanced_matrix, lb_keogh_matrix
+    from repro.data import random_pairs
+    a, b = random_pairs(48, 64, seed=3)
+    w = int(0.3 * 64)
+    u, lo = envelope(jnp.array(b), w)
+    keogh = np.diagonal(np.array(lb_keogh_matrix(jnp.array(a), u, lo)))
+    enh = np.diagonal(np.array(
+        lb_enhanced_matrix(jnp.array(a), jnp.array(b), u, lo, w, 4)
+    ))
+    d = np.diagonal(np.array(dtw_pairs(jnp.array(a), jnp.array(b), w)))
+    t_k = np.mean(keogh / d)
+    t_e = np.mean(enh / d)
+    assert t_e > t_k
+    assert np.all(enh <= d * (1 + 1e-4))
+
+
+def test_lm_trains_end_to_end(tmp_path):
+    """Tiny LM: a few steps of training reduce loss; checkpoint/restore
+    resumes identically (fault-tolerance path)."""
+    import dataclasses
+
+    from repro.configs.registry import ARCHS, reduced
+    from repro.models.model import LM
+    from repro.train import (
+        OptConfig, init_state, make_train_step, restore_checkpoint,
+        save_checkpoint,
+    )
+
+    r = reduced(ARCHS["qwen2.5-3b"])
+    model = LM(cfg=r, mesh=None)
+    opt = OptConfig(lr=3e-3, warmup=2)
+    state = init_state(model, jax.random.PRNGKey(0), opt)
+    step = jax.jit(make_train_step(model, opt))
+    rng = np.random.default_rng(0)
+    toks = jnp.array(rng.integers(0, r.vocab, size=(4, 32)), jnp.int32)
+    batch = {"tokens": toks, "labels": jnp.roll(toks, -1, axis=1)}
+    losses = []
+    for _ in range(8):
+        state, m = step(state, batch)
+        losses.append(float(m["loss"]))
+    assert losses[-1] < losses[0], losses
+
+    d = str(tmp_path / "ck")
+    save_checkpoint(d, int(state.step), state)
+    like = jax.tree.map(jnp.zeros_like, state)
+    restored, _ = restore_checkpoint(d, like)
+    s1, _ = step(state, batch)
+    s2, _ = step(restored, batch)
+    for a, b in zip(jax.tree.leaves(s1.params), jax.tree.leaves(s2.params)):
+        np.testing.assert_allclose(np.array(a, np.float32),
+                                   np.array(b, np.float32), rtol=1e-5, atol=1e-6)

@@ -1,0 +1,144 @@
+"""Training-substrate tests: optimizers, accumulation, compression,
+checkpointing (atomicity, restore, retention), elasticity plan."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.distributed import CompressionConfig, compress_grads, plan_mesh
+from repro.distributed.elastic import Heartbeat
+from repro.train import (
+    OptConfig,
+    latest_step,
+    opt_init,
+    opt_update,
+    restore_checkpoint,
+    save_checkpoint,
+)
+
+
+# ---------------------------------------------------------------------------
+# optimizers
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", ["adamw", "adafactor"])
+def test_optimizer_minimises_quadratic(name):
+    cfg = OptConfig(name=name, lr=0.1, weight_decay=0.0, warmup=1)
+    target = jnp.array([[1.0, -2.0], [3.0, 0.5]])
+    params = {"w": jnp.zeros((2, 2))}
+    state = opt_init(params, cfg)
+
+    def loss(p):
+        return jnp.sum((p["w"] - target) ** 2)
+
+    for step in range(200):
+        g = jax.grad(loss)(params)
+        params, state = opt_update(params, g, state, cfg, jnp.int32(step))
+    assert float(loss(params)) < 1e-2, name
+
+
+def test_grad_clipping():
+    from repro.train.optimizer import clip_by_global_norm
+    g = {"a": jnp.full((10,), 100.0)}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert float(norm) > 1.0
+    assert np.isclose(
+        float(jnp.sqrt(jnp.sum(clipped["a"] ** 2))), 1.0, rtol=1e-5
+    )
+
+
+# ---------------------------------------------------------------------------
+# gradient compression
+# ---------------------------------------------------------------------------
+
+def test_compression_error_feedback_invariant(rng):
+    cfg = CompressionConfig(bits=8, min_size=16)
+    g = {"w": jnp.array(rng.normal(size=(64, 64)).astype(np.float32))}
+    err = {"w": jnp.zeros((64, 64))}
+    comp, new_err = compress_grads(g, err, cfg)
+    # compressed + error == original (+ previous error): nothing is lost
+    np.testing.assert_allclose(
+        np.array(comp["w"] + new_err["w"]), np.array(g["w"]), rtol=1e-5, atol=1e-6
+    )
+    # 8-bit quantisation error is bounded by scale/2
+    scale = float(jnp.max(jnp.abs(g["w"]))) / 127.0
+    assert float(jnp.max(jnp.abs(new_err["w"]))) <= scale * 0.5 + 1e-6
+
+
+def test_compression_small_leaves_passthrough(rng):
+    cfg = CompressionConfig(bits=8, min_size=1 << 20)
+    g = {"w": jnp.array(rng.normal(size=(8, 8)).astype(np.float32))}
+    comp, err = compress_grads(g, {"w": jnp.zeros((8, 8))}, cfg)
+    np.testing.assert_allclose(np.array(comp["w"]), np.array(g["w"]))
+
+
+# ---------------------------------------------------------------------------
+# checkpointing
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_roundtrip(tmp_path):
+    state = {"params": {"w": jnp.arange(6.0).reshape(2, 3)},
+             "step": jnp.int32(7)}
+    d = str(tmp_path / "ckpt")
+    save_checkpoint(d, 7, state, extra={"data_cursor": 123})
+    like = jax.tree.map(jnp.zeros_like, state)
+    restored, extra = restore_checkpoint(d, like)
+    np.testing.assert_allclose(np.array(restored["params"]["w"]),
+                               np.arange(6.0).reshape(2, 3))
+    assert int(restored["step"]) == 7
+    assert extra["data_cursor"] == 123
+
+
+def test_checkpoint_atomicity_no_tmp_left(tmp_path):
+    d = str(tmp_path / "ckpt")
+    save_checkpoint(d, 1, {"x": jnp.ones(3)})
+    assert not any(f.endswith(".tmp") for f in os.listdir(d))
+    assert latest_step(d) == 1
+
+
+def test_checkpoint_retention(tmp_path):
+    d = str(tmp_path / "ckpt")
+    for s in range(6):
+        save_checkpoint(d, s, {"x": jnp.full(2, float(s))}, keep=3)
+    steps = sorted(int(f.split("_")[1]) for f in os.listdir(d))
+    assert steps == [3, 4, 5]
+    assert latest_step(d) == 5
+
+
+def test_checkpoint_restore_specific_step(tmp_path):
+    d = str(tmp_path / "ckpt")
+    for s in (1, 2):
+        save_checkpoint(d, s, {"x": jnp.full(2, float(s))}, keep=5)
+    restored, _ = restore_checkpoint(d, {"x": jnp.zeros(2)}, step=1)
+    np.testing.assert_allclose(np.array(restored["x"]), [1.0, 1.0])
+
+
+# ---------------------------------------------------------------------------
+# elasticity / straggler
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,tp", [(512, 16), (256, 16), (192, 16), (96, 16), (7, 16)])
+def test_plan_mesh_always_valid(n, tp):
+    plan = plan_mesh(n, preferred_tp=tp)
+    total = 1
+    for s in plan.shape:
+        total *= s
+    assert total <= n
+    assert plan.shape[-1] <= tp
+
+
+def test_plan_mesh_multi_pod():
+    plan = plan_mesh(512, pods=2)
+    assert plan.axes == ("pod", "data", "model")
+    assert plan.shape == (2, 16, 16)
+
+
+def test_heartbeat(tmp_path):
+    hb = Heartbeat(str(tmp_path / "hb.json"), host_id=3)
+    assert hb.is_straggler(0.001)        # no beat yet
+    hb.beat(step=10)
+    assert not hb.is_straggler(60.0)
+    assert hb.age() is not None and hb.age() < 5.0
