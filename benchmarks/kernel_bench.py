@@ -3,9 +3,21 @@
 On this CPU container the interpret-mode numbers measure *semantics*, not
 TPU performance — the derived column carries the roofline-relevant byte/
 flop counts per call so EXPERIMENTS.md can relate them to the v5e targets.
+
+Alongside the CSV rows this module emits ``BENCH_kernels.json``
+(name -> us_per_call) so the perf trajectory is machine-readable across
+PRs.  The checked-in copy is intentional — it is the per-PR trajectory
+record (numbers are container-CPU timings; CI uploads its own run as an
+artifact without committing it).  The ``dtw_band`` rows sweep ``w/L in {0.05, 0.1, 0.3, 1.0}`` at
+fixed L: with the band-packed O(L*W) recurrence the per-call time should
+grow ~linearly in w, where the seed O(L^2) wavefront was flat (and ~10x
+slower at w = 0.1L).
 """
 
 from __future__ import annotations
+
+import json
+import os
 
 import jax.numpy as jnp
 import numpy as np
@@ -13,11 +25,19 @@ import numpy as np
 from benchmarks.common import time_fn
 from repro.data import random_pairs
 from repro.kernels import ref
-from repro.kernels.ops import envelope_op, lb_enhanced_op, lb_keogh_op
+from repro.kernels.ops import envelope_op
+
+_JSON_PATH = os.environ.get("BENCH_KERNELS_JSON", "BENCH_kernels.json")
+
+# dtw_band O(L*W) scaling sweep: fixed L, w/L in {0.05, 0.1, 0.3, 1.0}
+_DTW_SCALING_L = 1024
+_DTW_SCALING_P = 16
+_DTW_W_FRACTIONS = (0.05, 0.1, 0.3, 1.0)
 
 
-def kernel_rows() -> list[str]:
-    rows = []
+def kernel_records() -> list[dict]:
+    """Each record: {name, us_per_call, derived} (derived is a string)."""
+    recs = []
     Q, C, L, w, v = 16, 256, 128, 38, 4
     q, c = random_pairs(max(Q, C), L, seed=1)
     qj = jnp.asarray(q[:Q])
@@ -25,28 +45,66 @@ def kernel_rows() -> list[str]:
     u, lo = envelope_op(cj, w)
 
     sec = time_fn(lambda b: ref.envelope_ref(b, w), cj)
-    rows.append(
-        f"envelope_jnp_{C}x{L},{1e6 * sec / C:.2f},"
-        f"bytes_per_series={L * 4 * 3}"
-    )
+    recs.append(dict(
+        name=f"envelope_jnp_{C}x{L}", us_per_call=1e6 * sec / C,
+        derived=f"bytes_per_series={L * 4 * 3}",
+    ))
     sec = time_fn(lambda a, b, e1, e2: ref.lb_keogh_ref(a, e1, e2), qj, cj, u, lo)
-    rows.append(
-        f"lb_keogh_jnp_{Q}x{C}x{L},{1e6 * sec / (Q * C):.3f},"
-        f"flops_per_pair={4 * L}"
-    )
+    recs.append(dict(
+        name=f"lb_keogh_jnp_{Q}x{C}x{L}", us_per_call=1e6 * sec / (Q * C),
+        derived=f"flops_per_pair={4 * L}",
+    ))
     sec = time_fn(
         lambda a, b, e1, e2: ref.lb_enhanced_ref(a, b, e1, e2, w, v),
         qj, cj, u, lo,
     )
-    rows.append(
-        f"lb_enhanced4_jnp_{Q}x{C}x{L},{1e6 * sec / (Q * C):.3f},"
-        f"flops_per_pair={4 * L + 4 * v * v}"
-    )
+    recs.append(dict(
+        name=f"lb_enhanced4_jnp_{Q}x{C}x{L}", us_per_call=1e6 * sec / (Q * C),
+        derived=f"flops_per_pair={4 * L + 4 * v * v}",
+    ))
     P = 64
     a2, b2 = random_pairs(P, L, seed=2)
     sec = time_fn(lambda x, y: ref.dtw_band_ref(x, y, w), jnp.asarray(a2), jnp.asarray(b2))
-    rows.append(
-        f"dtw_band_jnp_{P}x{L},{1e6 * sec / P:.1f},"
-        f"flops_per_pair={10 * L * min(2 * w + 1, L)}"
-    )
+    recs.append(dict(
+        name=f"dtw_band_jnp_{P}x{L}", us_per_call=1e6 * sec / P,
+        derived=f"flops_per_pair={10 * L * min(2 * w + 1, L)}",
+    ))
+
+    # band-packed O(L*W) scaling: per-call time should grow ~linearly in w
+    Ls, Ps = _DTW_SCALING_L, _DTW_SCALING_P
+    a3, b3 = random_pairs(Ps, Ls, seed=3)
+    a3j, b3j = jnp.asarray(a3), jnp.asarray(b3)
+    for frac in _DTW_W_FRACTIONS:
+        ws = min(Ls, max(1, int(round(frac * Ls))))
+        sec = time_fn(lambda x, y, _w=ws: ref.dtw_band_ref(x, y, _w), a3j, b3j)
+        recs.append(dict(
+            name=f"dtw_band_jnp_L{Ls}_w{ws}", us_per_call=1e6 * sec / Ps,
+            derived=f"flops_per_pair={10 * Ls * min(2 * ws + 1, Ls)}",
+        ))
+    return recs
+
+
+def write_json(recs: list[dict], path: str = _JSON_PATH) -> None:
+    with open(path, "w") as f:
+        json.dump(
+            {r["name"]: round(r["us_per_call"], 3) for r in recs},
+            f, indent=2, sort_keys=True,
+        )
+        f.write("\n")
+
+
+def kernel_rows() -> list[str]:
+    recs = kernel_records()
+    write_json(recs)
+    fmt = {
+        "envelope_jnp": "{:.2f}", "lb_keogh_jnp": "{:.3f}",
+        "lb_enhanced4_jnp": "{:.3f}",
+    }
+    rows = []
+    for r in recs:
+        prec = next(
+            (f for k, f in fmt.items() if r["name"].startswith(k)), "{:.1f}"
+        )
+        us = prec.format(r["us_per_call"])
+        rows.append(f"{r['name']},{us},{r['derived']}")
     return rows

@@ -31,10 +31,8 @@ from repro.search import (  # noqa: E402
 
 
 def main() -> None:
-    mesh = jax.make_mesh(
-        (4, 2), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
+    from repro.launch.mesh import make_host_mesh
+    mesh = make_host_mesh((4, 2), ("data", "model"))
     print(f"mesh: {dict(mesh.shape)} over {mesh.size} devices")
 
     ds = make_dataset(n_classes=4, n_train_per_class=64, n_test_per_class=8,
@@ -46,8 +44,12 @@ def main() -> None:
         verify_chunk=16, k=3,
     )
     sidx = shard_index(mesh, idx, ("data",))
-    step = jax.jit(make_distributed_search(mesh, cfg, data_axes=("data",),
-                                           query_axis="model"))
+    # NOTE: not jax.jit-wrapped.  On jax 0.4.x, jit(shard_map(...)) around
+    # the engine's data-dependent while_loop miscompiles (verified against
+    # brute force; see search/distributed.py docstring) — the shard_map
+    # alone is already exact and parallel.
+    step = make_distributed_search(mesh, cfg, data_axes=("data",),
+                                   query_axis="model")
 
     q = jnp.asarray(ds.x_test)
     t0 = time.perf_counter()

@@ -6,10 +6,28 @@ Paper Eqs. 1-2 with the warping-window constraint ``|i - j| <= w``
 TPU adaptation (DESIGN.md SS3): the DP recurrence has an intra-row sequential
 dependency (``D(i, j)`` needs ``D(i, j-1)``), so rows cannot be vectorised.
 Cells on one *anti-diagonal* ``d = i + j`` depend only on diagonals ``d-1``
-and ``d-2``, so we scan over the ``2L - 1`` anti-diagonals and vectorise each
-diagonal across the VPU.  Work is O(L^2) elementwise ops (band-masked), state
-is O(L).  The Pallas kernel (kernels/dtw_band.py) additionally packs a batch
-of (query, candidate) pairs across vector lanes.
+and ``d-2``, so we scan over the ``2L - 1`` anti-diagonals.
+
+Band-packed layout (this is what makes work O(L*W), not O(L^2)): a cell is
+addressed by its anti-diagonal ``d`` and its *diagonal offset*
+``k = i - j + w`` in ``[0, 2w]``.  The state per diagonal is a dense
+``Wb = 2w + 1`` vector instead of a length-``L`` one, and the recurrence is
+pure shifts in ``k``:
+
+    S_d[k] = cost(i, j) + min(S_{d-1}[k-1], S_{d-1}[k+1], S_{d-2}[k])
+
+with ``i = (d + k - w) / 2`` (cells exist only when ``d + k - w`` is even —
+half the lanes idle, which still wins for ``w << L``).  The cost gathers
+``a[(d+k-w)//2]`` / ``b[(d-k+w)//2]`` — contiguous slices of the
+*2x-duplicated* series ``A2[t] = a[t // 2]`` (and the flipped duplicate of
+``b``), so every step is two ``dynamic_slice`` calls, no gathers.
+
+Early abandon (PrunedDTW-style, arXiv:2102.05221): every warping path
+crosses anti-diagonals ``d`` or ``d-1``, and path prefixes only grow, so
+``min(S_d, S_{d-1})`` lower-bounds the final DTW.  When a ``cutoff`` is
+given and that frontier minimum exceeds it, the state is poisoned to +inf
+and the call returns +inf — the caller learns "distance > cutoff" without
+paying for the rest of the matrix.
 """
 
 from __future__ import annotations
@@ -26,40 +44,63 @@ _INF = jnp.inf
 
 
 @functools.partial(jax.jit, static_argnames=("w",))
-def dtw(a: Array, b: Array, w: int | None = None) -> Array:
+def dtw(a: Array, b: Array, w: int | None = None, cutoff=None) -> Array:
     """``DTW_w(a, b)`` for two equal-length 1-D series (squared cost).
 
     Args:
       a, b: ``(L,)`` series.
       w: Sakoe-Chiba half-width; ``None`` or ``>= L`` means unconstrained.
          ``w == 0`` is the squared Euclidean distance.
+      cutoff: optional scalar early-abandon threshold.  Whenever the true
+        distance is strictly below ``cutoff`` the result is exact; otherwise
+        the result is ``>= cutoff`` (usually +inf — the lane abandons as
+        soon as the frontier minimum proves the cutoff unreachable).
 
     Returns:
-      Scalar ``D(L, L)``.
+      Scalar ``D(L, L)`` (or +inf on abandon).
     """
     L = a.shape[-1]
     if w is None or w >= L:
         w = L
-    ii = jnp.arange(L)
+    wb = min(w, L - 1)                 # |i - j| <= L - 1 always holds
+    Wb = 2 * wb + 1
+    dt = a.dtype
+    if cutoff is None:
+        cutoff = jnp.asarray(_INF, dt)
+    # 2x-duplicated series, shifted so slice starts stay non-negative:
+    #   a2p[wb + t] = a[t // 2]     b2p[wb + t] = b[(2L - 1 - t) // 2]
+    pad_len = 2 * L + Wb + wb
+    a2 = jnp.repeat(a, 2, axis=-1)
+    b2f = jnp.flip(jnp.repeat(b, 2, axis=-1), axis=-1)
+    a2p = jnp.zeros((pad_len,), dt).at[wb:wb + 2 * L].set(a2)
+    b2p = jnp.zeros((pad_len,), dt).at[wb:wb + 2 * L].set(b2f)
+    kk = jnp.arange(Wb)
 
     def step(carry, d):
-        d1, d2 = carry  # diagonals d-1, d-2; index i holds D(i, d-i)
-        jj = d - ii
-        bj = b[jnp.clip(jj, 0, L - 1)]
-        cost = (a - bj) ** 2
-        up = d1                                        # D(i, j-1)
-        left = jnp.concatenate([jnp.full((1,), _INF, d1.dtype), d1[:-1]])   # D(i-1, j)
-        diag = jnp.concatenate([jnp.full((1,), _INF, d2.dtype), d2[:-1]])   # D(i-1, j-1)
-        best = jnp.minimum(jnp.minimum(up, left), diag)
-        best = jnp.where((ii == 0) & (jj == 0), 0.0, best)
-        nd = cost + best
-        valid = (jj >= 0) & (jj < L) & (jnp.abs(ii - jj) <= w)
+        d1, d2 = carry                                   # S_{d-1}, S_{d-2}
+        a_at = lax.dynamic_slice(a2p, (d,), (Wb,))       # a[(d + k - wb)//2]
+        b_at = lax.dynamic_slice(b2p, (2 * L - 1 - d,), (Wb,))
+        cost = (a_at - b_at) ** 2
+        inf1 = jnp.full((1,), _INF, dt)
+        dep_l = jnp.concatenate([inf1, d1[:-1]])         # S_{d-1}[k-1]
+        dep_r = jnp.concatenate([d1[1:], inf1])          # S_{d-1}[k+1]
+        best = jnp.minimum(jnp.minimum(dep_l, dep_r), d2)
+        origin = (d == 0) & (kk == wb)
+        nd = cost + jnp.where(origin, 0.0, best)
+        t = d + kk - wb                                  # 2i
+        s = d - kk + wb                                  # 2j
+        valid = ((t & 1) == 0) & (t >= 0) & (t <= 2 * L - 2) \
+            & (s >= 0) & (s <= 2 * L - 2)
         nd = jnp.where(valid, nd, _INF)
+        # every path crosses diagonal d or d-1 -> frontier min is a LB
+        dead = jnp.min(jnp.minimum(nd, d1)) > cutoff
+        nd = jnp.where(dead, _INF, nd)
+        d1 = jnp.where(dead, _INF, d1)
         return (nd, d1), None
 
-    init = (jnp.full((L,), _INF, a.dtype), jnp.full((L,), _INF, a.dtype))
+    init = (jnp.full((Wb,), _INF, dt), jnp.full((Wb,), _INF, dt))
     (dlast, _), _ = lax.scan(step, init, jnp.arange(2 * L - 1))
-    return dlast[L - 1]
+    return dlast[wb]
 
 
 @functools.partial(jax.jit, static_argnames=("w",))

@@ -1,21 +1,39 @@
-"""Pallas TPU kernel: banded DTW, lane-parallel anti-diagonal wavefront.
+"""Pallas TPU kernel: banded DTW, band-packed lane-parallel wavefront.
 
 This is the cascade's expensive verification step (paper Eq. 1-2 with the
 Sakoe-Chiba window).  GPU DTW implementations put one *pair* per thread
 block and wavefront within the matrix; the TPU-native layout is the
-transpose (DESIGN.md SS3): a *batch of pairs* fills the vector lanes and the
-DP sweeps the ``2L - 1`` anti-diagonals sequentially.  Every step is a
-handful of full-width ``(TP, L)`` VPU ops; there is no data-dependent
-control flow anywhere.
+transpose (DESIGN.md SS3): a *batch of pairs* fills the sublanes and the DP
+sweeps anti-diagonals sequentially with no data-dependent control flow.
 
-Key trick: on anti-diagonal ``d`` the candidate values needed are
-``b[d - i]`` for all ``i`` — a *contiguous, reversed* slice of ``b``.  We
-flip and zero-pad ``b`` once into a ``(TP, 3L)`` scratch so each step is a
-single ``dynamic_slice`` (no gathers; Mosaic-friendly).
+Band-packed state (the O(L*W) rewrite): a DP cell is addressed by its
+anti-diagonal ``d = i + j`` and diagonal offset ``k = i - j + w``; the state
+per anti-diagonal is a dense ``(TP, Wb)`` block with ``Wb = 2w + 1`` rounded
+up to the 128-lane multiple — *not* the ``(TP, L)`` full-width wavefront the
+seed kernel swept.  The recurrence is pure lane shifts:
 
-State: two diagonal buffers ``(TP, L)``; out-of-band / out-of-range cells
-ride along as +inf.  VMEM: a, b (2 x TP*L) + flipped pad (TP*3L) + 2
-diagonals (2 x TP*L) ~= 7*TP*L f32: TP=128, L=2048 -> 7.3 MB.
+    S_d[k] = cost(i, j) + min(S_{d-1}[k-1], S_{d-1}[k+1], S_{d-2}[k])
+
+with ``i = (d + k - w)/2`` (cells exist only at matching parity).  The cost
+operands are *contiguous* slices of the 2x-duplicated series
+``A2[t] = a[t//2]`` and the flipped duplicate of ``b`` — both packed on the
+host, so each of the ``2L - 1`` steps is two ``dynamic_slice`` calls plus a
+handful of ``(TP, Wb)`` VPU ops.  Per-pair work and state drop from O(L^2)
+to O(L * Wb): ~10x fewer FLOPs at the paper's w = 0.1L.
+
+Early abandon (PrunedDTW-style, arXiv:2102.05221): every warping path
+crosses anti-diagonal ``d`` or ``d-1`` and prefix costs only grow, so
+``min(S_d, S_{d-1})`` per pair lower-bounds its final DTW.  Rows whose
+frontier minimum exceeds their ``cutoff`` are poisoned to +inf and ride the
+remaining steps as dead lanes, returning +inf.
+
+VMEM budget (per grid step): packed operands a2p + b2p are
+``2 * TP * pad_len`` f32 with ``pad_len ~= 2L + Wb``, plus 2 state buffers
+and ~4 temporaries of ``TP * Wb`` — ``(4L + ~8Wb) * TP * 4`` bytes.  TP=128,
+L=2048, w=205 (0.1L, Wb=512): ~6.2 MB.  ``tile_p`` auto-shrinks (multiples
+of 8) to keep long series inside ``_VMEM_BUDGET``, which is what lets
+``_DTW_MAX_L`` in ops.py rise from 4096 to 16384 (L=16384, small w -> TP=32,
+~8.6 MB).
 """
 
 from __future__ import annotations
@@ -30,40 +48,49 @@ from jax.experimental import pallas as pl
 Array = jax.Array
 
 _INF = float(jnp.inf)
+_VMEM_BUDGET = 10 * 2**20          # bytes for packed operands + DP state
 
 
-def _dtw_band_kernel(a_ref, b_ref, out_ref, *, w: int):
-    a = a_ref[...]                                       # (TP, L)
-    b = b_ref[...]
-    tp, L = a.shape
-    dt = a.dtype
-    # b_flip_pad[:, L + t] = b[:, L - 1 - t]
-    zeros = jnp.zeros((tp, L), dt)
-    b_flip = jnp.flip(b, axis=-1)
-    bfp = jnp.concatenate([zeros, b_flip, zeros], axis=-1)  # (TP, 3L)
-    ii = lax.broadcasted_iota(jnp.int32, (tp, L), 1)
+def _round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def _dtw_band_kernel(a2p_ref, b2p_ref, cut_ref, out_ref, *, L: int, w: int,
+                     Wb: int):
+    a2p = a2p_ref[...]                                   # (TP, pad_len)
+    b2p = b2p_ref[...]
+    cut = cut_ref[...][:, None]                          # (TP, 1)
+    tp = a2p.shape[0]
+    dt = a2p.dtype
+    kk = lax.broadcasted_iota(jnp.int32, (tp, Wb), 1)
 
     def step(d, carry):
-        d1, d2 = carry                                   # diagonals d-1, d-2
-        # b[d - i] = b_flip[L - 1 - d + i] -> slice of bfp at 2L - 1 - d
-        b_at = lax.dynamic_slice(bfp, (0, 2 * L - 1 - d), (tp, L))
-        diff = a - b_at
+        d1, d2 = carry                                   # S_{d-1}, S_{d-2}
+        a_at = lax.dynamic_slice(a2p, (0, d), (tp, Wb))  # a[(d + k - w)//2]
+        b_at = lax.dynamic_slice(b2p, (0, 2 * L - 1 - d), (tp, Wb))
+        diff = a_at - b_at
         cost = diff * diff
         inf_col = jnp.full((tp, 1), _INF, dt)
-        up = d1                                          # D(i, j-1)
-        left = jnp.concatenate([inf_col, d1[:, :-1]], axis=-1)   # D(i-1, j)
-        diag = jnp.concatenate([inf_col, d2[:, :-1]], axis=-1)   # D(i-1, j-1)
-        best = jnp.minimum(jnp.minimum(up, left), diag)
-        jj = d - ii
-        origin = (ii == 0) & (jj == 0)
+        dep_l = jnp.concatenate([inf_col, d1[:, :-1]], axis=-1)  # S_{d-1}[k-1]
+        dep_r = jnp.concatenate([d1[:, 1:], inf_col], axis=-1)   # S_{d-1}[k+1]
+        best = jnp.minimum(jnp.minimum(dep_l, dep_r), d2)
+        origin = (d == 0) & (kk == w)
         nd = cost + jnp.where(origin, 0.0, best)
-        valid = (jj >= 0) & (jj < L) & (jnp.abs(ii - jj) <= w)
+        t = d + kk - w                                   # 2i
+        s = d - kk + w                                   # 2j
+        valid = ((t & 1) == 0) & (t >= 0) & (t <= 2 * L - 2) \
+            & (s >= 0) & (s <= 2 * L - 2) & (kk <= 2 * w)
         nd = jnp.where(valid, nd, _INF)
+        # every path crosses diagonal d or d-1 -> frontier min is a LB
+        fmin = jnp.min(jnp.minimum(nd, d1), axis=-1, keepdims=True)
+        dead = fmin > cut
+        nd = jnp.where(dead, _INF, nd)
+        d1 = jnp.where(dead, _INF, d1)
         return nd, d1
 
-    init = (jnp.full((tp, L), _INF, dt), jnp.full((tp, L), _INF, dt))
+    init = (jnp.full((tp, Wb), _INF, dt), jnp.full((tp, Wb), _INF, dt))
     dlast, _ = lax.fori_loop(0, 2 * L - 1, step, init)
-    out_ref[...] = dlast[:, L - 1]
+    out_ref[...] = dlast[:, w]
 
 
 @functools.partial(
@@ -73,29 +100,54 @@ def dtw_band_pallas(
     a: Array,
     b: Array,
     w: int | None = None,
+    cutoff: Array | None = None,
     *,
     tile_p: int = 128,
     interpret: bool = False,
 ) -> Array:
-    """Pairwise banded DTW: ``(P, L), (P, L) -> (P,)`` squared-cost values."""
+    """Pairwise banded DTW: ``(P, L), (P, L) -> (P,)`` squared-cost values.
+
+    ``cutoff`` is an optional per-pair ``(P,)`` early-abandon threshold:
+    pairs whose true distance is strictly below their cutoff return the
+    exact value; others return ``>= cutoff`` (normally +inf).
+    """
     P, L = a.shape
     if w is None or w >= L:
         w = L
-    tile_p = min(tile_p, P)
+    wb = min(w, L - 1)                 # |i - j| <= L - 1 always holds
+    Wb = _round_up(2 * wb + 1, 128)
+    pad_len = _round_up(2 * L + Wb + wb, 128)
+    # auto-shrink the pair tile so packed operands + state fit VMEM
+    per_row = (2 * pad_len + 8 * Wb) * 4
+    tile_p = min(tile_p, max(8, (_VMEM_BUDGET // per_row) // 8 * 8))
+    tile_p = min(tile_p, _round_up(P, 8))
+    if cutoff is None:
+        cutoff = jnp.full((P,), _INF, a.dtype)
+    else:
+        cutoff = jnp.broadcast_to(jnp.asarray(cutoff, a.dtype), (P,))
     pp = (-P) % tile_p
     if pp:
         a = jnp.pad(a, ((0, pp), (0, 0)))
         b = jnp.pad(b, ((0, pp), (0, 0)))
+        cutoff = jnp.pad(cutoff, (0, pp), constant_values=_INF)
     Pp = P + pp
+    # host-side band packing: a2p[wb + t] = a[t//2], b2p[wb + t] = b[(2L-1-t)//2]
+    a2 = jnp.repeat(a, 2, axis=-1)
+    b2f = jnp.flip(jnp.repeat(b, 2, axis=-1), axis=-1)
+    zl = jnp.zeros((Pp, wb), a.dtype)
+    zr = jnp.zeros((Pp, pad_len - wb - 2 * L), a.dtype)
+    a2p = jnp.concatenate([zl, a2, zr], axis=-1)         # (Pp, pad_len)
+    b2p = jnp.concatenate([zl, b2f, zr], axis=-1)
     out = pl.pallas_call(
-        functools.partial(_dtw_band_kernel, w=w),
+        functools.partial(_dtw_band_kernel, L=L, w=wb, Wb=Wb),
         grid=(Pp // tile_p,),
         in_specs=[
-            pl.BlockSpec((tile_p, L), lambda i: (i, 0)),
-            pl.BlockSpec((tile_p, L), lambda i: (i, 0)),
+            pl.BlockSpec((tile_p, pad_len), lambda i: (i, 0)),
+            pl.BlockSpec((tile_p, pad_len), lambda i: (i, 0)),
+            pl.BlockSpec((tile_p,), lambda i: (i,)),
         ],
         out_specs=pl.BlockSpec((tile_p,), lambda i: (i,)),
         out_shape=jax.ShapeDtypeStruct((Pp,), a.dtype),
         interpret=interpret,
-    )(a, b)
+    )(a2p, b2p, cutoff)
     return out[:P]

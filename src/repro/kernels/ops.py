@@ -31,7 +31,9 @@ Array = jax.Array
 # VMEM-derived shape limits (see per-kernel headers for the budgets)
 _ENVELOPE_MAX_L = 65536
 _LB_MAX_L = 16384
-_DTW_MAX_L = 4096
+# Band-packed layout: state is (TP, 2w+1) not (TP, L), and the pair tile
+# auto-shrinks, so the ceiling is 4x the seed kernel's 4096.
+_DTW_MAX_L = 16384
 
 
 def _interpret() -> bool:
@@ -70,11 +72,17 @@ def lb_enhanced_op(
     )
 
 
-def dtw_band_op(a: Array, b: Array, w: int | None = None) -> Array:
-    """Pairwise banded DTW ``(P, L) x (P, L) -> (P,)``."""
+def dtw_band_op(
+    a: Array, b: Array, w: int | None = None, cutoff: Array | None = None
+) -> Array:
+    """Pairwise banded DTW ``(P, L) x (P, L) -> (P,)``.
+
+    ``cutoff`` (optional, per-pair) early-abandons lanes whose running
+    frontier minimum proves the distance exceeds it (returns +inf there).
+    """
     if a.shape[-1] > _DTW_MAX_L:
-        return ref.dtw_band_ref(a, b, w)
-    return dtw_band_pallas(a, b, w, interpret=_interpret())
+        return ref.dtw_band_ref(a, b, w, cutoff)
+    return dtw_band_pallas(a, b, w, cutoff, interpret=_interpret())
 
 
 # ---------------------------------------------------------------------------

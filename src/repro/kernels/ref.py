@@ -43,6 +43,18 @@ def lb_enhanced_ref(
     return _lb.lb_enhanced_matrix(q, c, u, lo, w, v)
 
 
-def dtw_band_ref(a: Array, b: Array, w: int | None = None) -> Array:
-    """Pairwise banded DTW ``(P, L), (P, L) -> (P,)``."""
-    return jax.vmap(_dtw_fn, (0, 0, None))(a, b, w)
+def dtw_band_ref(
+    a: Array, b: Array, w: int | None = None, cutoff: Array | None = None
+) -> Array:
+    """Pairwise banded DTW ``(P, L), (P, L) -> (P,)``.
+
+    ``cutoff`` is an optional per-pair early-abandon threshold with the
+    same semantics as the Pallas kernel: exact below the cutoff, ``>=
+    cutoff`` (normally +inf) otherwise.  Abandon decisions are made on the
+    same per-anti-diagonal frontier as the kernel, so the two stay
+    oracle-comparable even at the abandon boundary.
+    """
+    if cutoff is None:
+        return jax.vmap(_dtw_fn, (0, 0, None))(a, b, w)
+    cutoff = jnp.broadcast_to(jnp.asarray(cutoff, a.dtype), (a.shape[0],))
+    return jax.vmap(_dtw_fn, (0, 0, None, 0))(a, b, w, cutoff)

@@ -12,6 +12,13 @@ import math
 import jax
 
 
+def _axis_types_kw(n: int) -> dict:
+    """``axis_types=Auto`` where the installed jax knows it (>= 0.5),
+    nothing on older versions (Auto is their only behaviour anyway)."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    return {} if axis_type is None else {"axis_types": (axis_type.Auto,) * n}
+
+
 def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
     """The target deployment mesh: one v5e-class 16x16 pod (256 chips), or
     two pods (512 chips) with a leading pure-DP ``pod`` axis."""
@@ -29,7 +36,7 @@ def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
         shape,
         axes,
         devices=devices,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
+        **_axis_types_kw(len(axes)),
     )
 
 
@@ -42,5 +49,5 @@ def make_host_mesh(
         shape,
         axes,
         devices=jax.devices()[:n],
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
+        **_axis_types_kw(len(axes)),
     )

@@ -170,7 +170,8 @@ def moe_apply(
             aux = lax.pmean(aux, dp)   # make the scalar mesh-uniform
         return y, aux
 
-    fn = jax.shard_map(
+    from repro.distributed.sharding import shard_map_compat
+    fn = shard_map_compat(
         island,
         mesh=mesh,
         in_specs=(
@@ -181,7 +182,6 @@ def moe_apply(
             P(ep_axis, None, None),
         ),
         out_specs=(P(dp, None), P()),
-        check_vma=False,
     )
     xt = x.reshape(B * S, d)
     y, aux = fn(xt, p["router"], p["wi"], p["wg"], p["wo"])

@@ -1,6 +1,12 @@
 """NN-DTW search engine: cascade pruning + exact verification."""
 
-from repro.search.cascade import CascadeConfig, bands_prefilter, compute_bounds
+from repro.search.cascade import (
+    CascadeConfig,
+    CascadeResult,
+    bands_prefilter,
+    compute_bounds,
+    staged_bounds,
+)
 from repro.search.distributed import make_distributed_search, shard_index
 from repro.search.engine import (
     EngineConfig,
@@ -13,6 +19,7 @@ from repro.search.index import DTWIndex, build_index, kim_features
 
 __all__ = [
     "CascadeConfig",
+    "CascadeResult",
     "DTWIndex",
     "EngineConfig",
     "SearchResult",
@@ -25,4 +32,5 @@ __all__ = [
     "make_distributed_search",
     "nn_search",
     "shard_index",
+    "staged_bounds",
 ]

@@ -8,8 +8,29 @@ same *work-skipping* expressed as dense tiers (DESIGN.md SS3):
   tier 2  LB_ENHANCED   O(L)/pair   fused bands + Keogh bridge kernel
 
 Every tier is a valid lower bound, so the *running elementwise max* of the
-computed tiers is the tightest available bound per pair.  The cascade
-returns that (Q, N) bound matrix; the engine (engine.py) then verifies
+computed tiers is the tightest available bound per pair.
+
+Staged pipeline (``staged_bounds`` — Lemire's two-pass cascade,
+arXiv:0811.3301, adapted to dense batches): paying the O(L) tier-2 bound on
+every (query, candidate) pair wastes exactly the work the cascade exists to
+skip.  Instead:
+
+  1. tier 0 on all pairs (O(Q*N) total);
+  2. tier 1 (bands only) on all pairs (O(Q*N*V^2));
+  3. gather-compact the most promising ``B`` candidates per query
+     (ascending ``max(tier0, tier1)`` — a static *survivor budget*, so the
+     whole pipeline stays jit/shard_map-traceable) into dense batches;
+  4. tier 2 only on the compacted survivors (O(Q*B*L) instead of O(Q*N*L)),
+     scatter-maxed back into the bound matrix;
+  5. *provisional k-th best*: verify the k best-bounded candidates per
+     query with banded DTW — their k-th best distance ``tau`` upper-bounds
+     the final k-th best, so the engine starts its loop already knowing
+     that any pair whose bound exceeds ``tau`` can never enter the top-k
+     (and threads ``tau`` into the DTW kernel's early-abandon cutoff).
+
+Every returned entry is still a valid lower bound (non-survivors keep their
+tier-0/1 bound), so engine exactness is untouched; the budget only trades
+bound tightness for tier-2 work.  The engine (engine.py) verifies
 ascending-bound candidates with banded DTW until exactness is certified.
 """
 
@@ -17,17 +38,21 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Sequence
+from typing import Callable, Sequence
 
 import jax
 import jax.numpy as jnp
 from jax import lax
 
+from repro.core import lower_bounds as _lb
 from repro.kernels import ref as kref
-from repro.kernels.ops import lb_enhanced_op
+from repro.kernels.ops import dtw_band_op, lb_enhanced_op
+from repro.kernels.ref import dtw_band_ref
 from repro.search.index import DTWIndex, kim_features
 
 Array = jax.Array
+
+_INF = jnp.inf
 
 
 @dataclasses.dataclass(frozen=True)
@@ -44,6 +69,10 @@ class CascadeConfig:
         pure-jnp references (False).  The jnp path is used when lowering the
         distributed search for the multi-pod dry-run, where kernel dispatch
         is orthogonal to the sharding being validated.
+      staged: engine uses the staged pipeline (``staged_bounds``) instead of
+        dense full-tier bounds.
+      survivor_budget: per-query tier-2 compaction width; ``None`` derives
+        ``max(64, 4k, N/8)`` (clamped to N).  Must stay static for tracing.
     """
 
     w: int
@@ -51,9 +80,35 @@ class CascadeConfig:
     use_kim: bool = True
     candidate_chunk: int = 512
     use_pallas: bool = True
+    staged: bool = True
+    survivor_budget: int | None = None
 
     def lb_fn(self):
         return lb_enhanced_op if self.use_pallas else kref.lb_enhanced_ref
+
+    def dtw_fn(self):
+        return dtw_band_op if self.use_pallas else dtw_band_ref
+
+    def budget(self, n: int, k: int = 1) -> int:
+        if self.survivor_budget is not None:
+            return max(1, min(n, self.survivor_budget))
+        return min(n, max(64, 4 * k, -(-n // 8)))
+
+
+@dataclasses.dataclass(frozen=True)
+class CascadeResult:
+    """Staged-cascade output consumed by the engine.
+
+    Attributes:
+      lb: (Q, N) per-pair lower bounds (tier-0/1 everywhere, tier-2 on the
+        compacted survivors, exact DTW at the seed positions).
+      seed_idx: (Q, k) candidate ids verified for the provisional threshold.
+      seed_d: (Q, k) their exact banded-DTW distances.
+    """
+
+    lb: Array
+    seed_idx: Array
+    seed_d: Array
 
 
 def lb_kim_tier(q: Array, index: DTWIndex) -> Array:
@@ -81,12 +136,28 @@ def _chunked(
     return jnp.concatenate(outs, axis=1) if len(outs) > 1 else outs[0]
 
 
-def compute_bounds(q: Array, index: DTWIndex, cfg: CascadeConfig) -> Array:
+# Per-pair LB_ENHANCED for the compacted survivor batches.  A dedicated
+# pairwise Pallas kernel is a ROADMAP follow-on; the vmapped core math is
+# already O(L) per pair, which is what the compaction buys.
+_pairwise_enhanced = jax.vmap(
+    _lb.lb_enhanced_env, in_axes=(0, 0, 0, 0, None, None)
+)
+
+
+def compute_bounds(
+    q: Array, index: DTWIndex, cfg: CascadeConfig, *, k: int = 1
+) -> Array:
     """(Q, N) tightest-available lower bound for every (query, candidate).
 
-    Chunked over candidates so each fused-kernel call matches the VMEM
-    tiling documented in kernels/lb_enhanced.py.
+    With ``cfg.staged`` this runs the staged pipeline (see module
+    docstring) and returns its bound matrix; otherwise every pair pays the
+    full O(L) tier (the seed behaviour, kept for diagnostics and as the
+    baseline the staged path is property-tested against).  Chunked over
+    candidates so each fused-kernel call matches the VMEM tiling documented
+    in kernels/lb_enhanced.py.
     """
+    if cfg.staged:
+        return staged_bounds(q, index, cfg, k=k).lb
     n = index.n
     chunk = min(cfg.candidate_chunk, n)
     lb_fn = cfg.lb_fn()
@@ -108,11 +179,78 @@ def compute_bounds(q: Array, index: DTWIndex, cfg: CascadeConfig) -> Array:
     return lb
 
 
+def staged_bounds(
+    q: Array,
+    index: DTWIndex,
+    cfg: CascadeConfig,
+    k: int = 1,
+    dtw_fn: Callable | None = None,
+    *,
+    exclude: Array | None = None,
+) -> CascadeResult:
+    """Staged tier-0 -> threshold -> tier-1 -> compact -> tier-2 cascade.
+
+    Fully traceable (static survivor budget), so it works under ``jit`` and
+    inside the distributed ``shard_map``.  ``exclude`` removes a per-query
+    candidate (leave-one-out) from seeding and compaction; its bound entry
+    is left untouched for the engine to mask.
+    """
+    q = jnp.asarray(q, jnp.float32)
+    Q, L = q.shape
+    n = index.n
+    k = min(k, n)
+    if dtw_fn is None:
+        dtw_fn = cfg.dtw_fn()
+    qarange = jnp.arange(Q)
+
+    # ---- tier 0: O(1) Kim features ------------------------------------
+    kim = lb_kim_tier(q, index) if cfg.use_kim else jnp.zeros((Q, n), q.dtype)
+
+    # ---- tier 1: bands-only on all pairs ------------------------------
+    bands = bands_prefilter(q, index, cfg)
+    lb01 = jnp.maximum(kim, bands)
+
+    # ---- gather-compact the B most promising survivors per query ------
+    B = cfg.budget(n, k)
+    sel_key = lb01 if exclude is None else lb01.at[qarange, exclude].set(_INF)
+    _, cand = lax.top_k(-sel_key, B)                 # ascending tier-0/1 bound
+
+    # ---- tier 2: fused LB_ENHANCED on the compacted batches -----------
+    chunk = min(cfg.candidate_chunk, B)
+    cols = []
+    for s in range(0, B, chunk):
+        e = min(s + chunk, B)
+        cidx = cand[:, s:e].reshape(-1)              # (Q * bc,)
+        qf = jnp.repeat(q, e - s, axis=0)
+        pe = _pairwise_enhanced(
+            qf, index.series[cidx], index.upper[cidx], index.lower[cidx],
+            cfg.w, cfg.v,
+        )
+        cols.append(pe.reshape(Q, e - s))
+    enh = jnp.concatenate(cols, axis=1) if len(cols) > 1 else cols[0]
+    lb = lb01.at[qarange[:, None], cand].max(enh)
+
+    # ---- provisional k-th best: verify the k best-bounded candidates --
+    # Seeds are picked from the *refined* bound order, so the k seed
+    # verifications are exactly the first k verifications the engine's
+    # ascending-bound loop would perform anyway — the threshold tier costs
+    # no extra DTW, it only moves those verifications before the loop so
+    # tau = k-th seed distance can warm-start pruning and cutoffs.
+    seed_sel = lb if exclude is None else lb.at[qarange, exclude].set(_INF)
+    _, seed_idx = lax.top_k(-seed_sel, k)            # (Q, k)
+    qs = jnp.repeat(q, k, axis=0)                    # (Q*k, L)
+    cs = index.series[seed_idx.reshape(-1)]
+    seed_d = dtw_fn(qs, cs, cfg.w).reshape(Q, k)
+    # seed pairs are exactly verified: their distance is the perfect bound
+    lb = lb.at[qarange[:, None], seed_idx].max(seed_d)
+    return CascadeResult(lb=lb, seed_idx=seed_idx, seed_d=seed_d)
+
+
 def bands_prefilter(q: Array, index: DTWIndex, cfg: CascadeConfig) -> Array:
     """(Q, N) bands-only tier (Alg. 1 lines 1-11) — the cheap pre-bound.
 
-    Exposed separately so callers on real hardware can prune with it before
-    paying for the O(L) bridge; on the roofline it is ~V^2/L of tier 2.
+    Used by the staged pipeline to pick tier-2 survivors before paying for
+    the O(L) bridge; on the roofline it is ~V^2/L of tier 2.
     """
     n = index.n
     chunk = min(cfg.candidate_chunk, n)

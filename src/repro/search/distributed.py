@@ -14,6 +14,15 @@ Sharding contract (DESIGN.md SS6):
 The communication volume is O(Q * k * shards) floats per search step —
 independent of both N and L — so the collective roofline term stays
 negligible at any corpus size (quantified in EXPERIMENTS.md SSRoofline).
+
+Known limitation (jax 0.4.x): wrapping the returned step in an *outer*
+``jax.jit`` miscompiles the engine's data-dependent verification
+``while_loop`` under ``shard_map(check_rep=False)`` — results silently
+drop candidates (reproduced against brute force at mesh (4, 2), N=256;
+``check_rep=True`` is unavailable: 0.4.x has no replication rule for
+``while``).  Call the returned step directly — it is already compiled
+per-shard and exactness-tested by tests/test_distributed.py.  Tracked in
+ROADMAP "Open items".
 """
 
 from __future__ import annotations
@@ -33,10 +42,16 @@ from repro.search.index import DTWIndex
 Array = jax.Array
 
 
+def _axis_size(axis: str) -> Array:
+    if hasattr(lax, "axis_size"):                      # jax >= 0.6
+        return lax.axis_size(axis)
+    return lax.psum(1, axis)                           # jax 0.4.x
+
+
 def _combined_axis_index(axes: Sequence[str]) -> Array:
     idx = lax.axis_index(axes[0])
     for a in axes[1:]:
-        idx = idx * lax.axis_size(a) + lax.axis_index(a)
+        idx = idx * _axis_size(a) + lax.axis_index(a)
     return idx
 
 
@@ -86,9 +101,9 @@ def make_distributed_search(
         P(query_axis, None),  # queries (Q, L) sharded on Q
     )
     out_specs = (P(query_axis, None), P(query_axis, None), P(query_axis))
-    return jax.shard_map(
+    from repro.distributed.sharding import shard_map_compat
+    return shard_map_compat(
         local_step, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-        check_vma=False,
     )
 
 

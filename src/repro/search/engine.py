@@ -3,13 +3,23 @@
 TPU adaptation of the paper's sequential early-abandon NN loop
 (DESIGN.md SS3): instead of visiting candidates one at a time, the engine
 
-  1. computes the (Q, N) cascade bound matrix (cascade.py),
-  2. sorts candidates per query by ascending bound (UCR-suite ordering),
+  1. computes per-pair lower bounds with the staged cascade (cascade.py):
+     Kim tier -> provisional k-th best from k verified seeds -> bands tier
+     -> compacted LB_ENHANCED on survivors (or the dense full-tier matrix
+     when ``cascade.staged`` is off),
+  2. warm-starts the per-query top-k from the verified seeds and sorts the
+     remaining candidates by ascending bound (UCR-suite ordering),
   3. verifies banded DTW in fixed-size *rounds* of ``verify_chunk``
-     candidates, maintaining a per-query top-k, and
+     candidates, threading each query's current k-th best distance into the
+     kernel's per-pair ``cutoff`` so hopeless lanes abandon early
+     (PrunedDTW-style), and
   4. stops a query as soon as its k-th best verified DTW is <= the smallest
      unverified bound — an *exactness certificate*: no remaining candidate
      can displace the current top-k, because bounds never exceed true DTW.
+
+The cutoff never changes results: a lane abandons only when its frontier
+minimum proves the true distance exceeds the query's current k-th best, so
+the abandoned candidate could not have entered the top-k anyway.
 
 The result is exact (identical neighbours to brute force — property-tested)
 and the number of verified candidates matches what the paper's pruning-power
@@ -28,7 +38,7 @@ from jax import lax
 
 from repro.kernels.ops import dtw_band_op
 from repro.kernels.ref import dtw_band_ref
-from repro.search.cascade import CascadeConfig, compute_bounds
+from repro.search.cascade import CascadeConfig, compute_bounds, staged_bounds
 from repro.search.index import DTWIndex
 
 Array = jax.Array
@@ -98,10 +108,29 @@ def nn_search(
     M = min(cfg.verify_chunk, N)
     w = cfg.cascade.w
     dtw_fn = dtw_band_op if cfg.cascade.use_pallas else dtw_band_ref
+    qarange = jnp.arange(Q)
 
-    lb = compute_bounds(q, index, cfg.cascade)            # (Q, N)
+    if cfg.cascade.staged:
+        cres = staged_bounds(
+            q, index, cfg.cascade, k=k, dtw_fn=dtw_fn, exclude=exclude
+        )
+        lb = cres.lb
+        # seeds are already verified: warm-start the top-k with them and
+        # drop them from the unverified ordering
+        sel = jnp.argsort(cres.seed_d, axis=1)
+        best_d0 = jnp.take_along_axis(cres.seed_d, sel, axis=1)
+        best_i0 = jnp.take_along_axis(cres.seed_idx, sel, axis=1)
+        n_dtw0 = jnp.full((Q,), k, jnp.int32)
+        lb_order = lb.at[qarange[:, None], cres.seed_idx].set(_INF)
+    else:
+        lb = compute_bounds(q, index, cfg.cascade, k=k)
+        best_d0 = jnp.full((Q, k), _INF, jnp.float32)
+        best_i0 = jnp.full((Q, k), -1, jnp.int32)
+        n_dtw0 = jnp.zeros((Q,), jnp.int32)
+        lb_order = lb
     if exclude is not None:
-        lb = lb.at[jnp.arange(Q), exclude].set(_INF)
+        lb = lb.at[qarange, exclude].set(_INF)
+        lb_order = lb_order.at[qarange, exclude].set(_INF)
 
     # ---- work-conserving flat verification scheduler -------------------
     # The naive per-query round scheme wastes whole rounds on finished
@@ -112,12 +141,11 @@ def nn_search(
     # unverified ranks, so stragglers soak up the slots finished queries
     # no longer need (up to the static gather cap T_max = 8*M).  Total DTW
     # compute tracks the semantic verified count instead of rounds*Q*M.
-    order = jnp.argsort(lb, axis=1)                       # (Q, N)
-    slb = jnp.take_along_axis(lb, order, axis=1)
+    order = jnp.argsort(lb_order, axis=1)                 # (Q, N)
+    slb = jnp.take_along_axis(lb_order, order, axis=1)
     slb_pad = jnp.pad(slb, ((0, 0), (0, 1)), constant_values=_INF)
     P = Q * M
     T_max = min(N, 8 * M)
-    qarange = jnp.arange(Q)
     jarange = jnp.arange(P)
     max_rounds = -(-Q * N // P) + 2
 
@@ -133,14 +161,16 @@ def nn_search(
         valid = (~done[qi]) & (rank < N) & (stripe < quota)
         rank_c = jnp.minimum(rank, N - 1)
         cidx = order[qi, rank_c]                          # candidate ids
+        # +inf-sorted ranks are masked-out entries (verified seeds /
+        # excluded candidates) — never re-verify them, or their results
+        # would duplicate existing top-k members
+        valid = valid & jnp.isfinite(slb[qi, rank_c])
         lbv = jnp.where(valid, slb[qi, rank_c], _INF)
         kth0 = best_d[:, k - 1]
-        active = valid & (lbv < kth0[qi])                 # semantic count
-        d = dtw_fn(q[qi], index.series[cidx], w)          # (P,) flat
+        # thread each query's current k-th best into the kernel's per-pair
+        # early-abandon cutoff: lanes that cannot beat it return +inf
+        d = dtw_fn(q[qi], index.series[cidx], w, kth0[qi])  # (P,) flat
         d = jnp.where(valid, d, _INF)
-        n_dtw = n_dtw + jax.ops.segment_sum(
-            active.astype(jnp.int32), qi, num_segments=Q
-        )
         # per-query gather of this round's results (stripe layout)
         t = jnp.arange(T_max)
         slots = pos[:, None] + t[None, :] * n_un          # (Q, T_max)
@@ -154,6 +184,17 @@ def nn_search(
         neg, sel = lax.top_k(-alld, k)
         best_d = -neg
         best_i = jnp.take_along_axis(alli, sel, axis=1)
+        # semantic count (the paper's pruning-power numerator): a slot is a
+        # *necessary* verification if its bound still beats the post-round
+        # k-th best (the sequential loop could not have skipped it) or it
+        # entered the top-k.  Counting against the pre-round k-th best
+        # would charge slots the sequential loop skips once the earlier
+        # candidates of the same round have updated the running best.
+        kth1 = best_d[:, k - 1]
+        active = valid & ((lbv < kth1[qi]) | (d <= kth1[qi]))
+        n_dtw = n_dtw + jax.ops.segment_sum(
+            active.astype(jnp.int32), qi, num_segments=Q
+        )
         cursor = jnp.minimum(cursor + jnp.where(~done, quota, 0), N)
         next_lb = slb_pad[qarange, cursor]
         done = done | (best_d[:, k - 1] <= next_lb) | (cursor >= N)
@@ -163,13 +204,16 @@ def nn_search(
         r, _, _, _, _, done = state
         return (r < max_rounds) & ~jnp.all(done)
 
+    # queries whose seeded k-th best already certifies against the smallest
+    # unverified bound never enter the loop
+    done0 = best_d0[:, k - 1] <= slb_pad[:, 0]
     state = (
         jnp.int32(0),
-        jnp.full((Q, k), _INF, jnp.float32),
-        jnp.full((Q, k), -1, jnp.int32),
+        best_d0,
+        best_i0,
+        n_dtw0,
         jnp.zeros((Q,), jnp.int32),
-        jnp.zeros((Q,), jnp.int32),
-        jnp.zeros((Q,), bool),
+        done0,
     )
     _, best_d, best_i, n_dtw, _, _ = lax.while_loop(cond, body, state)
     return SearchResult(dists=best_d, idx=best_i, n_dtw=n_dtw, lb=lb)
@@ -196,16 +240,34 @@ def classify(
 def brute_force(
     index: DTWIndex, queries: Array, w: int, k: int = 1,
     *, exclude: Array | None = None, use_pallas: bool = True,
+    chunk: int = 512,
 ) -> tuple[Array, Array]:
-    """Unpruned exact k-NN (the O(N * L * W) baseline the paper speeds up)."""
+    """Unpruned exact k-NN (the O(N * L * W) baseline the paper speeds up).
+
+    Chunked over candidates with a running top-k merge, so peak memory is
+    O(Q * chunk * L) instead of the (Q*N, L) broadcast materialisation that
+    OOMed at store scale (N=10k, L=2048).
+    """
     q = jnp.asarray(queries, jnp.float32)
     Q, L = q.shape
     N = index.n
+    k = min(k, N)
+    chunk = min(chunk, N)
     dtw_fn = dtw_band_op if use_pallas else dtw_band_ref
-    qrep = jnp.broadcast_to(q[:, None, :], (Q, N, L)).reshape(Q * N, L)
-    crep = jnp.broadcast_to(index.series[None], (Q, N, L)).reshape(Q * N, L)
-    d = dtw_fn(qrep, crep, w).reshape(Q, N)
-    if exclude is not None:
-        d = d.at[jnp.arange(Q), exclude].set(_INF)
-    neg, idx = lax.top_k(-d, min(k, N))
-    return -neg, idx
+    best_d = jnp.full((Q, k), _INF, jnp.float32)
+    best_i = jnp.full((Q, k), -1, jnp.int32)
+    for s in range(0, N, chunk):
+        e = min(s + chunk, N)
+        C = e - s
+        qrep = jnp.repeat(q, C, axis=0)                  # (Q*C, L)
+        crep = jnp.tile(index.series[s:e], (Q, 1))       # (Q*C, L)
+        d = dtw_fn(qrep, crep, w).reshape(Q, C)
+        ids = jnp.broadcast_to(jnp.arange(s, e, dtype=jnp.int32)[None], (Q, C))
+        if exclude is not None:
+            d = jnp.where(ids == exclude[:, None], _INF, d)
+        alld = jnp.concatenate([best_d, d], axis=1)
+        alli = jnp.concatenate([best_i, ids], axis=1)
+        neg, sel = lax.top_k(-alld, k)
+        best_d = -neg
+        best_i = jnp.take_along_axis(alli, sel, axis=1)
+    return best_d, best_i

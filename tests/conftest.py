@@ -1,9 +1,97 @@
 """Shared fixtures.  NOTE: no XLA_FLAGS here on purpose — smoke tests and
 benches must see the real single CPU device; only launch/dryrun.py forces
-512 host devices (and tests that need a mesh spawn subprocesses)."""
+512 host devices (and tests that need a mesh spawn subprocesses).
+
+Hypothesis guard: four test modules use property tests.  Where the real
+``hypothesis`` package is installed (the ``dev`` extra in pyproject.toml)
+they run under it unchanged.  Where it is absent, a minimal deterministic
+shim is installed into ``sys.modules`` *before collection* (conftest runs
+first), so the suite degrades gracefully instead of dying at import: each
+``@given`` test runs ``max_examples`` fixed-seed samples drawn from the
+declared strategies.  Only the API surface the tests actually use is
+shimmed (``given``, ``settings`` profiles, ``strategies.integers``).
+"""
+
+import sys
+import types
+import zlib
 
 import numpy as np
 import pytest
+
+try:
+    import hypothesis  # noqa: F401
+except ModuleNotFoundError:
+    _PROFILES = {"default": {"max_examples": 10}}
+    _ACTIVE = ["default"]
+
+    class _Strategy:
+        def __init__(self, sample):
+            self._sample = sample
+
+        def sample(self, rng):
+            return self._sample(rng)
+
+    def _integers(min_value, max_value):
+        return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+    def _sampled_from(elements):
+        seq = list(elements)
+        return _Strategy(lambda rng: seq[int(rng.integers(len(seq)))])
+
+    def _booleans():
+        return _Strategy(lambda rng: bool(rng.integers(2)))
+
+    class _Settings:
+        def __init__(self, **kw):
+            self._kw = kw
+
+        def __call__(self, fn):                     # @settings(...) decorator
+            return fn
+
+        @staticmethod
+        def register_profile(name, **kw):
+            _PROFILES[name] = kw
+
+        @staticmethod
+        def load_profile(name):
+            _ACTIVE[0] = name
+
+    def _given(**strategies):
+        def deco(fn):
+            import functools
+            import inspect
+
+            @functools.wraps(fn)
+            def runner(*args, **kwargs):
+                n = _PROFILES.get(_ACTIVE[0], {}).get("max_examples") or 10
+                rng = np.random.default_rng(
+                    zlib.crc32(fn.__qualname__.encode())
+                )
+                for _ in range(n):
+                    drawn = {k: s.sample(rng) for k, s in strategies.items()}
+                    fn(*args, **kwargs, **drawn)
+
+            # hide the drawn parameters from pytest's fixture resolution
+            sig = inspect.signature(fn)
+            runner.__signature__ = sig.replace(parameters=[
+                p for name, p in sig.parameters.items()
+                if name not in strategies
+            ])
+            return runner
+
+        return deco
+
+    _mod = types.ModuleType("hypothesis")
+    _st = types.ModuleType("hypothesis.strategies")
+    _st.integers = _integers
+    _st.sampled_from = _sampled_from
+    _st.booleans = _booleans
+    _mod.given = _given
+    _mod.settings = _Settings
+    _mod.strategies = _st
+    sys.modules["hypothesis"] = _mod
+    sys.modules["hypothesis.strategies"] = _st
 
 
 @pytest.fixture

@@ -1,0 +1,222 @@
+"""Cutoff-aware (PrunedDTW-style) DTW semantics + staged-cascade invariants.
+
+The contract under test (kernels/dtw_band.py, core/dtw.py):
+  * cutoff-aware DTW equals plain DTW whenever the true distance is below
+    the cutoff;
+  * otherwise it returns a value >= cutoff (normally +inf — the lane
+    abandoned);
+  * the band-packed Pallas kernel matches the jnp reference bit-for-bit on
+    the abandon decision (both poison on the same per-anti-diagonal
+    frontier);
+and for the staged cascade (search/cascade.py, search/engine.py):
+  * staged bounds never exceed true DTW;
+  * the engine stays exact with staging on, off, and under tiny survivor
+    budgets;
+  * per-query n_dtw with the staged cascade never exceeds the dense-tier
+    engine's count.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import dtw_pairs, oracle
+from repro.core.dtw import dtw
+from repro.data import make_dataset
+from repro.kernels import ops, ref
+from repro.search import (
+    CascadeConfig,
+    EngineConfig,
+    brute_force,
+    build_index,
+    compute_bounds,
+    nn_search,
+    staged_bounds,
+)
+
+
+# ---------------------------------------------------------------------------
+# cutoff semantics on the scalar jnp path
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("L,w", [(8, 2), (16, 0), (33, 7), (64, 20), (16, 16)])
+def test_dtw_cutoff_exact_below(rng, L, w):
+    a = jnp.array(rng.normal(size=L).astype(np.float32))
+    b = jnp.array(rng.normal(size=L).astype(np.float32))
+    want = float(dtw(a, b, w))
+    got = float(dtw(a, b, w, want * 2.0 + 1.0))
+    assert np.allclose(got, want, rtol=1e-5)
+
+
+@pytest.mark.parametrize("L,w", [(8, 2), (16, 0), (33, 7), (64, 20)])
+def test_dtw_cutoff_abandons_above(rng, L, w):
+    a = jnp.array(rng.normal(size=L).astype(np.float32))
+    b = jnp.array(rng.normal(size=L).astype(np.float32))
+    want = float(dtw(a, b, w))
+    cut = want * 0.5
+    got = float(dtw(a, b, w, cut))
+    assert got >= cut - 1e-6          # usually +inf; never a value below cut
+
+
+def test_dtw_cutoff_inf_is_noop(rng):
+    a = jnp.array(rng.normal(size=24).astype(np.float32))
+    b = jnp.array(rng.normal(size=24).astype(np.float32))
+    assert float(dtw(a, b, 5, jnp.inf)) == pytest.approx(float(dtw(a, b, 5)))
+
+
+def test_dtw_band_packed_matches_oracle(rng):
+    """The O(L*W) band-packed recurrence is still the paper's Eq. 1-2."""
+    for L, w in [(8, 2), (16, 0), (16, 16), (33, 7), (64, 20), (5, 1)]:
+        a = rng.normal(size=L).astype(np.float32)
+        b = rng.normal(size=L).astype(np.float32)
+        assert np.allclose(
+            float(dtw(jnp.array(a), jnp.array(b), w)),
+            oracle.dtw(a, b, w), rtol=1e-4,
+        )
+
+
+# ---------------------------------------------------------------------------
+# band-packed Pallas kernel vs the jnp reference
+# ---------------------------------------------------------------------------
+
+# odd lengths, w in {0, 1, L//4, L}, and P off the 8-sublane/tile multiple
+KERNEL_SWEEP = [
+    (9, 33, 0), (9, 33, 1), (9, 33, 8), (9, 33, 33),
+    (130, 47, 11), (1, 16, 4), (5, 64, 16), (12, 21, 21),
+]
+
+
+@pytest.mark.parametrize("P,L,w", KERNEL_SWEEP)
+def test_dtw_band_kernel_cutoff_sweep(rng, P, L, w):
+    a = jnp.array(rng.normal(size=(P, L)).astype(np.float32))
+    b = jnp.array(rng.normal(size=(P, L)).astype(np.float32))
+    want_plain = np.array(ref.dtw_band_ref(a, b, w))
+    got_plain = np.array(ops.dtw_band_op(a, b, w))
+    np.testing.assert_allclose(got_plain, want_plain, rtol=1e-4, atol=1e-5)
+    # alternating low/high cutoffs, away from the abandon decision boundary
+    cut = jnp.array(np.where(np.arange(P) % 2 == 0,
+                             want_plain * 0.5,
+                             want_plain * 2.0 + 1.0).astype(np.float32))
+    got = np.array(ops.dtw_band_op(a, b, w, cut))
+    want = np.array(ref.dtw_band_ref(a, b, w, cut))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+    # high-cutoff lanes are exact
+    np.testing.assert_allclose(got[1::2], want_plain[1::2], rtol=1e-4,
+                               atol=1e-5)
+    # low-cutoff lanes never report below their cutoff
+    assert np.all(got[0::2] >= np.array(cut)[0::2] - 1e-5)
+
+
+def test_dtw_band_kernel_long_series_fallback(rng):
+    """L beyond _DTW_MAX_L routes to the (cutoff-aware) jnp reference."""
+    L = ops._DTW_MAX_L + 7
+    a = jnp.array(rng.normal(size=(2, L)).astype(np.float32))
+    b = jnp.array(rng.normal(size=(2, L)).astype(np.float32))
+    out = ops.dtw_band_op(a, b, 3, jnp.array([np.inf, 0.0], np.float32))
+    assert out.shape == (2,)
+    assert np.isfinite(float(out[0])) and float(out[1]) == np.inf
+
+
+# ---------------------------------------------------------------------------
+# staged cascade + engine invariants
+# ---------------------------------------------------------------------------
+
+def _setup(w=8, n_per=12, L=48, seed=0, k=1, chunk=16, verify=4, **ckw):
+    ds = make_dataset(n_classes=3, n_train_per_class=n_per,
+                      n_test_per_class=4, length=L, seed=seed)
+    idx = build_index(ds.x_train, w, ds.y_train)
+    cfg = EngineConfig(
+        cascade=CascadeConfig(w=w, v=4, candidate_chunk=chunk, **ckw),
+        verify_chunk=verify, k=k,
+    )
+    return ds, idx, cfg
+
+
+def test_staged_bounds_below_true_distance():
+    ds, idx, cfg = _setup()
+    res = staged_bounds(jnp.asarray(ds.x_test), idx, cfg.cascade, k=2)
+    dm = np.array(dtw_pairs(jnp.asarray(ds.x_test), idx.series, cfg.cascade.w))
+    assert np.all(np.array(res.lb) <= dm * (1 + 1e-4) + 1e-4)
+    # seed distances are the true distances of the seeded pairs
+    qi = np.arange(dm.shape[0])[:, None]
+    np.testing.assert_allclose(
+        np.array(res.seed_d), dm[qi, np.array(res.seed_idx)], rtol=1e-4,
+        atol=1e-5,
+    )
+
+
+def test_staged_matches_dense_bounds_on_survivors():
+    """Within the compacted set the staged bound equals the dense tier-2."""
+    ds, idx, cfg = _setup(w=8)
+    q = jnp.asarray(ds.x_test)
+    dense = np.array(compute_bounds(q, idx, CascadeConfig(w=8, staged=False)))
+    staged = np.array(compute_bounds(q, idx, CascadeConfig(w=8)))
+    # budget >= N here, so every non-seed entry matches the dense tiers and
+    # seed entries may only be tighter (exact DTW)
+    assert np.all(staged >= dense - 1e-5)
+
+
+@pytest.mark.parametrize("w,k,verify,seed", [
+    (8, 1, 4, 0), (0, 2, 3, 1), (24, 3, 1, 2), (4, 1, 9, 3), (16, 2, 5, 4),
+])
+def test_staged_engine_exact_and_no_more_dtw(w, k, verify, seed):
+    ds, idx, cfg = _setup(w=w, seed=seed, k=k, verify=verify)
+    res = nn_search(idx, ds.x_test, cfg)
+    bd, _ = brute_force(idx, ds.x_test, w, k=k)
+    np.testing.assert_allclose(np.array(res.dists), np.array(bd),
+                               rtol=1e-4, atol=1e-5)
+    cfg_dense = EngineConfig(
+        cascade=CascadeConfig(w=w, v=4, candidate_chunk=16, staged=False),
+        verify_chunk=verify, k=k,
+    )
+    res_dense = nn_search(idx, ds.x_test, cfg_dense)
+    np.testing.assert_allclose(np.array(res_dense.dists), np.array(bd),
+                               rtol=1e-4, atol=1e-5)
+    assert np.all(np.array(res.n_dtw) <= np.array(res_dense.n_dtw))
+    assert np.all(np.array(res.n_dtw) >= 1)
+
+
+def test_tiny_survivor_budget_stays_exact():
+    """The budget only trades bound tightness for tier-2 work — never
+    exactness."""
+    ds, idx, _ = _setup()
+    for budget in (1, 2, 5):
+        cfg = EngineConfig(
+            cascade=CascadeConfig(w=8, survivor_budget=budget),
+            verify_chunk=4, k=2,
+        )
+        res = nn_search(idx, ds.x_test, cfg)
+        bd, _ = brute_force(idx, ds.x_test, 8, k=2)
+        np.testing.assert_allclose(np.array(res.dists), np.array(bd),
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_staged_engine_with_exclude():
+    ds, idx, cfg = _setup()
+    q = ds.x_train[:6]
+    res = nn_search(idx, q, cfg, exclude=jnp.arange(6))
+    assert np.all(np.array(res.idx[:, 0]) != np.arange(6))
+    bd, bi = brute_force(idx, q, 8, k=1, exclude=jnp.arange(6))
+    np.testing.assert_allclose(np.array(res.dists), np.array(bd),
+                               rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# chunked brute force
+# ---------------------------------------------------------------------------
+
+def test_brute_force_chunking_invariant():
+    """Any candidate chunking gives identical distances (bounded memory)."""
+    ds, idx, _ = _setup()
+    want_d, want_i = brute_force(idx, ds.x_test, 8, k=3, chunk=idx.n)
+    for chunk in (1, 7, 16, 1000):
+        got_d, got_i = brute_force(idx, ds.x_test, 8, k=3, chunk=chunk)
+        np.testing.assert_allclose(np.array(got_d), np.array(want_d),
+                                   rtol=1e-5)
+
+
+def test_brute_force_chunked_exclude():
+    ds, idx, _ = _setup()
+    q = ds.x_train[:5]
+    d, i = brute_force(idx, q, 8, k=1, exclude=jnp.arange(5), chunk=4)
+    assert np.all(np.array(i[:, 0]) != np.arange(5))

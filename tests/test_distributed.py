@@ -29,8 +29,8 @@ import numpy as np, jax, jax.numpy as jnp
 from repro.data import make_dataset
 from repro.search import (build_index, brute_force, EngineConfig, CascadeConfig,
                           make_distributed_search, shard_index)
-mesh = jax.make_mesh((4, 2), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.launch.mesh import make_host_mesh
+mesh = make_host_mesh((4, 2), ("data", "model"))
 ds = make_dataset(n_classes=3, n_train_per_class=32, n_test_per_class=8,
                   length=64, seed=5)
 idx = build_index(ds.x_train, 12, ds.y_train)
@@ -52,8 +52,8 @@ import numpy as np, jax, jax.numpy as jnp
 from repro.data import make_dataset
 from repro.search import (build_index, brute_force, EngineConfig, CascadeConfig,
                           make_distributed_search, shard_index)
-mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 3)
+from repro.launch.mesh import make_host_mesh
+mesh = make_host_mesh((2, 2, 2), ("pod", "data", "model"))
 ds = make_dataset(n_classes=2, n_train_per_class=16, n_test_per_class=4,
                   length=32, seed=9)
 idx = build_index(ds.x_train, 8, ds.y_train)
@@ -81,8 +81,8 @@ from repro.distributed.sharding import AxisRules, param_shardings
 from repro.models.model import LM
 from repro.train import OptConfig, init_state, make_train_step
 import dataclasses
-mesh = jax.make_mesh((2, 2), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.launch.mesh import make_host_mesh
+mesh = make_host_mesh((2, 2), ("data", "model"))
 rules = AxisRules()
 r = reduced(ARCHS["qwen2-moe-a2.7b"])
 r = dataclasses.replace(r, n_experts=8, top_k=2)
@@ -114,10 +114,9 @@ import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.train import save_checkpoint, restore_checkpoint
 devs = jax.devices()
-m4 = jax.make_mesh((4,), ("data",), devices=devs[:4],
-                   axis_types=(jax.sharding.AxisType.Auto,))
-m2 = jax.make_mesh((2,), ("data",), devices=devs[:2],
-                   axis_types=(jax.sharding.AxisType.Auto,))
+from repro.launch.mesh import make_host_mesh
+m4 = make_host_mesh((4,), ("data",))
+m2 = make_host_mesh((2,), ("data",))
 x = jax.device_put(jnp.arange(16.0).reshape(8, 2),
                    NamedSharding(m4, P("data", None)))
 with tempfile.TemporaryDirectory() as d:
