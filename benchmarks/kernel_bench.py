@@ -8,10 +8,23 @@ Alongside the CSV rows this module emits ``BENCH_kernels.json``
 (name -> us_per_call) so the perf trajectory is machine-readable across
 PRs.  The checked-in copy is intentional — it is the per-PR trajectory
 record (numbers are container-CPU timings; CI uploads its own run as an
-artifact without committing it).  The ``dtw_band`` rows sweep ``w/L in {0.05, 0.1, 0.3, 1.0}`` at
-fixed L: with the band-packed O(L*W) recurrence the per-call time should
-grow ~linearly in w, where the seed O(L^2) wavefront was flat (and ~10x
-slower at w = 0.1L).
+artifact without committing it, and fails if a re-run *loses* keys vs the
+previous commit — see .github/workflows/ci.yml).  The ``dtw_band`` rows
+sweep ``w/L in {0.05, 0.1, 0.3, 1.0}`` at fixed L: with the band-packed
+O(L*W) recurrence the per-call time should grow ~linearly in w, where the
+seed O(L^2) wavefront was flat (and ~10x slower at w = 0.1L).
+
+PR 2 rows (the survivor hot path):
+  * ``lb_enhanced_pairwise_{jnp,pallas}_*`` — staged tier-2 refinement
+    over packed (P, L) survivor pairs: PR 1's vmapped-jnp path vs the
+    dedicated pairwise Pallas kernel.
+  * ``dtw_band_{pr1,ee}_*_{nocut,cut}`` — PR 1's per-step lane-poisoning
+    DTW kernel vs the (pair_tile, row_block) early-exit grid, with and
+    without an aggressive per-pair cutoff (every lane abandons in the
+    first block, so ``ee``+``cut`` measures genuinely skipped sweeps).
+  * ``*_speedup_vs_pr1`` — derived ratios (PR 1 path time / new path
+    time) so the trajectory is self-describing without cross-referencing
+    old commits.
 """
 
 from __future__ import annotations
@@ -19,13 +32,18 @@ from __future__ import annotations
 import json
 import os
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import time_fn
 from repro.data import random_pairs
 from repro.kernels import ref
-from repro.kernels.ops import envelope_op
+from repro.kernels.ops import (
+    dtw_band_op,
+    envelope_op,
+    lb_enhanced_pairwise_op,
+)
 
 _JSON_PATH = os.environ.get("BENCH_KERNELS_JSON", "BENCH_kernels.json")
 
@@ -33,6 +51,10 @@ _JSON_PATH = os.environ.get("BENCH_KERNELS_JSON", "BENCH_kernels.json")
 _DTW_SCALING_L = 1024
 _DTW_SCALING_P = 16
 _DTW_W_FRACTIONS = (0.05, 0.1, 0.3, 1.0)
+
+# early-exit sweep: smaller L so the interpret-mode kernels stay CI-cheap
+_DTW_EE_L = 256
+_DTW_EE_P = 16
 
 
 def kernel_records() -> list[dict]:
@@ -81,6 +103,69 @@ def kernel_records() -> list[dict]:
             name=f"dtw_band_jnp_L{Ls}_w{ws}", us_per_call=1e6 * sec / Ps,
             derived=f"flops_per_pair={10 * Ls * min(2 * ws + 1, Ls)}",
         ))
+
+    # --- pairwise survivor hot path: PR 1 vmapped jnp vs Pallas kernel ---
+    # both sides jitted: PR 1 ran the vmapped math inside jitted
+    # staged_bounds, so an eager-ref timing would just measure dispatch
+    Pp, Lp, wp, vp = 128, 256, 26, 4
+    qp, cp = random_pairs(Pp, Lp, seed=4)
+    qpj, cpj = jnp.asarray(qp), jnp.asarray(cp)
+    up, lop = envelope_op(cpj, wp)
+    jit_pairwise_ref = jax.jit(
+        lambda a, b, e1, e2: ref.lb_enhanced_pairwise_ref(a, b, e1, e2, wp, vp)
+    )
+    sec_jnp = time_fn(jit_pairwise_ref, qpj, cpj, up, lop)
+    recs.append(dict(
+        name=f"lb_enhanced_pairwise_jnp_{Pp}x{Lp}",
+        us_per_call=1e6 * sec_jnp / Pp,
+        derived=f"flops_per_pair={4 * Lp + 4 * vp * vp}",
+    ))
+    sec_pal = time_fn(
+        lambda a, b, e1, e2: lb_enhanced_pairwise_op(a, b, e1, e2, wp, vp),
+        qpj, cpj, up, lop,
+    )
+    recs.append(dict(
+        name=f"lb_enhanced_pairwise_pallas_{Pp}x{Lp}",
+        us_per_call=1e6 * sec_pal / Pp,
+        derived="interpret-mode semantics timing on CPU",
+    ))
+    recs.append(dict(
+        name=f"lb_enhanced_pairwise_{Pp}x{Lp}_speedup_vs_pr1",
+        us_per_call=sec_jnp / sec_pal,
+        derived="ratio: PR1 vmapped-jnp tier-2 / pairwise Pallas kernel",
+    ))
+
+    # --- early-exit dtw_band: PR 1 per-step poisoning vs row-block grid ---
+    Le, Pe = _DTW_EE_L, _DTW_EE_P
+    a4, b4 = random_pairs(Pe, Le, seed=5)
+    a4j, b4j = jnp.asarray(a4), jnp.asarray(b4)
+    for frac in _DTW_W_FRACTIONS:
+        we = min(Le, max(1, int(round(frac * Le))))
+        d_true = dtw_band_op(a4j, b4j, we)
+        # aggressive cutoff: every lane abandons inside the first row block,
+        # so the ee path's remaining blocks are genuinely skipped
+        cut = jnp.asarray(d_true) * 0.01
+        times = {}
+        for tag, ee in (("pr1", False), ("ee", True)):
+            for ctag, c in (("nocut", None), ("cut", cut)):
+                sec = time_fn(
+                    lambda x, y, _w=we, _c=c, _ee=ee: dtw_band_op(
+                        x, y, _w, _c, early_exit=_ee
+                    ),
+                    a4j, b4j,
+                )
+                times[(tag, ctag)] = sec
+                recs.append(dict(
+                    name=f"dtw_band_{tag}_L{Le}_w{we}_{ctag}",
+                    us_per_call=1e6 * sec / Pe,
+                    derived=f"flops_per_pair={10 * Le * min(2 * we + 1, Le)}",
+                ))
+        for ctag in ("nocut", "cut"):
+            recs.append(dict(
+                name=f"dtw_band_ee_L{Le}_w{we}_{ctag}_speedup_vs_pr1",
+                us_per_call=times[("pr1", ctag)] / times[("ee", ctag)],
+                derived="ratio: PR1 lane-poisoning sweep / row-block early exit",
+            ))
     return recs
 
 

@@ -6,7 +6,14 @@ from repro.core.distances import (
     squared_euclidean_matrix,
     znorm,
 )
-from repro.core.dtw import cost_matrix, dtw, dtw_batch, dtw_pairs
+from repro.core.dtw import (
+    cost_matrix,
+    dtw,
+    dtw_band_blocked,
+    dtw_batch,
+    dtw_pairs,
+    row_block_policy,
+)
 from repro.core.envelopes import envelope, envelope_naive, sliding_reduce
 from repro.core.lower_bounds import (
     BOUND_NAMES,
@@ -30,8 +37,10 @@ __all__ = [
     "cost_matrix",
     "delta",
     "dtw",
+    "dtw_band_blocked",
     "dtw_batch",
     "dtw_pairs",
+    "row_block_policy",
     "envelope",
     "envelope_naive",
     "get_bound",

@@ -28,6 +28,17 @@ crosses anti-diagonals ``d`` or ``d-1``, and path prefixes only grow, so
 given and that frontier minimum exceeds it, the state is poisoned to +inf
 and the call returns +inf — the caller learns "distance > cutoff" without
 paying for the rest of the matrix.
+
+Row-block layout (``dtw_band_blocked``): the Pallas kernel's early-exit
+grid (kernels/dtw_band.py) groups the ``2L - 1`` anti-diagonals into
+``row_block_policy(L)``-sized blocks and makes abandon decisions only at
+block boundaries.  Because the frontier minimum is *monotone
+non-decreasing* in ``d`` (each new cell is ``cost + min`` of frontier
+entries), checking at block boundaries abandons exactly the same lanes as
+checking every step — the coarser granularity trades a later poison for a
+much cheaper inner loop and real block skipping.  ``dtw_band_blocked`` is
+the batched jnp mirror of that layout: same block boundaries, same
+frontier test, so kernel and reference stay bit-comparable.
 """
 
 from __future__ import annotations
@@ -101,6 +112,104 @@ def dtw(a: Array, b: Array, w: int | None = None, cutoff=None) -> Array:
     init = (jnp.full((Wb,), _INF, dt), jnp.full((Wb,), _INF, dt))
     (dlast, _), _ = lax.scan(step, init, jnp.arange(2 * L - 1))
     return dlast[wb]
+
+
+def row_block_policy(L: int) -> int:
+    """Anti-diagonals per row block for the early-exit banded sweep.
+
+    Shared by the Pallas kernel (kernels/dtw_band.py) and the jnp reference
+    (``dtw_band_blocked``) so abandon decisions land on identical block
+    boundaries.  ~8 blocks per sweep, 64-step multiples: coarse enough that
+    the per-block frontier reduction is amortised, fine enough that a
+    poisoned tile skips most of its remaining anti-diagonals.
+    """
+    D = 2 * L - 1
+    return min(D, max(64, -(-(D // 8) // 64) * 64))
+
+
+def band_step(d, carry, a2p, b2p, kk, *, L: int, w: int):
+    """One anti-diagonal of the band-packed recurrence (no abandon test).
+
+    ``carry = (S_{d-1}, S_{d-2})`` as ``(P, Wb)`` blocks; returns
+    ``(S_d, S_{d-1})``.  Shared verbatim by the Pallas kernel bodies
+    (kernels/dtw_band.py) and the jnp reference below — one definition is
+    what keeps kernel and oracle bit-comparable by construction.  ``kk`` is
+    the per-lane diagonal-offset iota; lanes beyond ``2w`` (the kernel's
+    128-multiple padding) are masked invalid.
+    """
+    d1, d2 = carry
+    tp, Wb = d1.shape
+    dt = d1.dtype
+    a_at = lax.dynamic_slice(a2p, (0, d), (tp, Wb))      # a[(d + k - w)//2]
+    b_at = lax.dynamic_slice(b2p, (0, 2 * L - 1 - d), (tp, Wb))
+    diff = a_at - b_at
+    cost = diff * diff
+    inf_col = jnp.full((tp, 1), _INF, dt)
+    dep_l = jnp.concatenate([inf_col, d1[:, :-1]], axis=-1)  # S_{d-1}[k-1]
+    dep_r = jnp.concatenate([d1[:, 1:], inf_col], axis=-1)   # S_{d-1}[k+1]
+    best = jnp.minimum(jnp.minimum(dep_l, dep_r), d2)
+    origin = (d == 0) & (kk == w)
+    nd = cost + jnp.where(origin, 0.0, best)
+    t = d + kk - w                                       # 2i
+    s = d - kk + w                                       # 2j
+    valid = ((t & 1) == 0) & (t >= 0) & (t <= 2 * L - 2) \
+        & (s >= 0) & (s <= 2 * L - 2) & (kk <= 2 * w)
+    nd = jnp.where(valid, nd, _INF)
+    return nd, d1
+
+
+@functools.partial(jax.jit, static_argnames=("w", "row_block"))
+def dtw_band_blocked(
+    a: Array,
+    b: Array,
+    w: int | None = None,
+    cutoff: Array | None = None,
+    *,
+    row_block: int | None = None,
+) -> Array:
+    """Batched band-packed DTW with row-block abandon checks.
+
+    ``(P, L) x (P, L) -> (P,)`` — the pure-jnp mirror of the Pallas
+    kernel's ``(pair_tile, row_block)`` early-exit grid: the frontier test
+    runs only at row-block boundaries (every ``row_block`` anti-diagonals
+    and at the final one), poisoning dead lanes to +inf there.  Outputs are
+    identical to the per-step-checked scalar ``dtw`` (frontier minima are
+    monotone), but the decision *points* match the kernel exactly, which is
+    what keeps the two bit-comparable at abandon boundaries.
+    """
+    P, L = a.shape
+    if w is None or w >= L:
+        w = L
+    wb = min(w, L - 1)
+    Wb = 2 * wb + 1
+    dt = a.dtype
+    if cutoff is None:
+        cutoff = jnp.full((P,), _INF, dt)
+    else:
+        cutoff = jnp.broadcast_to(jnp.asarray(cutoff, dt), (P,))
+    cut = cutoff[:, None]
+    R = row_block if row_block is not None else row_block_policy(L)
+    D = 2 * L - 1
+    pad_len = 2 * L + Wb + wb
+    a2 = jnp.repeat(a, 2, axis=-1)
+    b2f = jnp.flip(jnp.repeat(b, 2, axis=-1), axis=-1)
+    a2p = jnp.zeros((P, pad_len), dt).at[:, wb:wb + 2 * L].set(a2)
+    b2p = jnp.zeros((P, pad_len), dt).at[:, wb:wb + 2 * L].set(b2f)
+    kk = lax.broadcasted_iota(jnp.int32, (P, Wb), 1)
+
+    def step(carry, d):
+        nd, d1 = band_step(d, carry, a2p, b2p, kk, L=L, w=wb)
+        # abandon only at row-block boundaries (the kernel's grid layout)
+        check = ((d + 1) % R == 0) | (d == D - 1)
+        fmin = jnp.min(jnp.minimum(nd, d1), axis=-1, keepdims=True)
+        dead = check & (fmin > cut)
+        nd = jnp.where(dead, _INF, nd)
+        d1 = jnp.where(dead, _INF, d1)
+        return (nd, d1), None
+
+    init = (jnp.full((P, Wb), _INF, dt), jnp.full((P, Wb), _INF, dt))
+    (dlast, _), _ = lax.scan(step, init, jnp.arange(D))
+    return dlast[:, wb]
 
 
 @functools.partial(jax.jit, static_argnames=("w",))

@@ -5,8 +5,11 @@ NN-DTW search — so the kernels here cover that pipeline end to end:
 
   * envelope.py        — Sakoe-Chiba envelopes (Eqs. 5-6), prefix-doubling
   * lb_keogh.py        — batched LB_KEOGH blocks (Eq. 7)
-  * lb_enhanced.py     — fused elastic-band + bridge LB_ENHANCED^V (Eq. 14)
-  * dtw_band.py        — banded DTW verification, lane-parallel wavefront
+  * lb_enhanced.py     — fused LB_ENHANCED^V, cross-block (Q, L)x(C, L)
+  * lb_enhanced_pairwise.py — fused LB_ENHANCED^V, packed (P, L) survivor
+    pairs (the staged cascade's tier-2 shape)
+  * dtw_band.py        — banded DTW verification, band-packed wavefront
+    with row-block early exit
   * mamba_scan.py      — fused Mamba selective scan (substrate hot-spot)
   * flash_attention.py — fused attention forward (substrate hot-spot)
 
@@ -20,6 +23,7 @@ from repro.kernels.ops import (
     envelope_op,
     flash_attention_op,
     lb_enhanced_op,
+    lb_enhanced_pairwise_op,
     lb_keogh_op,
     mamba_scan_op,
 )
@@ -29,6 +33,7 @@ __all__ = [
     "envelope_op",
     "flash_attention_op",
     "lb_enhanced_op",
+    "lb_enhanced_pairwise_op",
     "lb_keogh_op",
     "mamba_scan_op",
 ]

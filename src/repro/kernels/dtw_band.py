@@ -1,4 +1,5 @@
-"""Pallas TPU kernel: banded DTW, band-packed lane-parallel wavefront.
+"""Pallas TPU kernel: banded DTW, band-packed wavefront with row-block
+early exit.
 
 This is the cascade's expensive verification step (paper Eq. 1-2 with the
 Sakoe-Chiba window).  GPU DTW implementations put one *pair* per thread
@@ -6,34 +7,63 @@ block and wavefront within the matrix; the TPU-native layout is the
 transpose (DESIGN.md SS3): a *batch of pairs* fills the sublanes and the DP
 sweeps anti-diagonals sequentially with no data-dependent control flow.
 
-Band-packed state (the O(L*W) rewrite): a DP cell is addressed by its
+Band-packed state (the O(L*W) layout): a DP cell is addressed by its
 anti-diagonal ``d = i + j`` and diagonal offset ``k = i - j + w``; the state
 per anti-diagonal is a dense ``(TP, Wb)`` block with ``Wb = 2w + 1`` rounded
-up to the 128-lane multiple — *not* the ``(TP, L)`` full-width wavefront the
-seed kernel swept.  The recurrence is pure lane shifts:
+up to the 128-lane multiple — *not* a ``(TP, L)`` full-width wavefront.
+The recurrence is pure lane shifts:
 
     S_d[k] = cost(i, j) + min(S_{d-1}[k-1], S_{d-1}[k+1], S_{d-2}[k])
 
 with ``i = (d + k - w)/2`` (cells exist only at matching parity).  The cost
 operands are *contiguous* slices of the 2x-duplicated series
 ``A2[t] = a[t//2]`` and the flipped duplicate of ``b`` — both packed on the
-host, so each of the ``2L - 1`` steps is two ``dynamic_slice`` calls plus a
-handful of ``(TP, Wb)`` VPU ops.  Per-pair work and state drop from O(L^2)
-to O(L * Wb): ~10x fewer FLOPs at the paper's w = 0.1L.
+host, so each anti-diagonal step is two ``dynamic_slice`` calls plus a
+handful of ``(TP, Wb)`` VPU ops.
 
-Early abandon (PrunedDTW-style, arXiv:2102.05221): every warping path
-crosses anti-diagonal ``d`` or ``d-1`` and prefix costs only grow, so
-``min(S_d, S_{d-1})`` per pair lower-bounds its final DTW.  Rows whose
-frontier minimum exceeds their ``cutoff`` are poisoned to +inf and ride the
-remaining steps as dead lanes, returning +inf.
+Row-block early exit (this file's grid): PR 1's kernel poisoned abandoned
+lanes to +inf but still swept all ``2L - 1`` anti-diagonals per pair tile —
+dead lanes *rode along*.  Herrmann & Webb (arXiv:2102.05221) show pruned
+DTW wins come from skipping work blocks, so the grid here is
+``(pair_tile, row_block)``: the anti-diagonals are grouped into
+``row_block_policy(L)``-sized blocks, the DP frontier (two ``(TP, Wb)``
+buffers) is *carried across grid steps in VMEM scratch*, and a scalar
+liveness flag in SMEM steers each block:
+
+  * block 0 resets the frontier and raises the flag;
+  * every block runs its sweep under ``pl.when(live)`` — once the flag
+    drops, remaining blocks return immediately (the whole anti-diagonal
+    sweep is genuinely skipped, not masked);
+  * at each block boundary the per-pair frontier minimum
+    ``min(S_d, S_{d-1})`` — a valid DTW lower bound, since every warping
+    path crosses anti-diagonal ``d`` or ``d-1`` and prefix costs only grow
+    — is tested against the per-pair ``cutoff``; dead lanes are poisoned
+    to +inf, and the flag drops when every lane in the tile is dead;
+  * the last block writes the output (poisoned tiles emit +inf).
+
+Because the frontier minimum is monotone non-decreasing in ``d``, the
+block-boundary test abandons exactly the lanes the per-step test would —
+outputs are identical, decisions just land on block boundaries.  The jnp
+reference (core/dtw.py ``dtw_band_blocked``) shares both the per-step
+recurrence (``core.dtw.band_step`` — one definition, used verbatim by the
+kernel bodies below) and the block boundaries (``row_block_policy``),
+keeping kernel and oracle bit-comparable by construction.
+Moving the cross-lane frontier reduction out of the inner loop also
+shrinks the per-step op count: the hot loop is now slices + shifts + adds
+only.
+
+``early_exit=False`` keeps PR 1's one-grid-step-per-pair-tile kernel with
+per-step lane poisoning — the baseline the benchmark trajectory
+(BENCH_kernels.json ``dtw_band_pr1_*`` rows) measures the early-exit grid
+against.
 
 VMEM budget (per grid step): packed operands a2p + b2p are
-``2 * TP * pad_len`` f32 with ``pad_len ~= 2L + Wb``, plus 2 state buffers
-and ~4 temporaries of ``TP * Wb`` — ``(4L + ~8Wb) * TP * 4`` bytes.  TP=128,
-L=2048, w=205 (0.1L, Wb=512): ~6.2 MB.  ``tile_p`` auto-shrinks (multiples
-of 8) to keep long series inside ``_VMEM_BUDGET``, which is what lets
-``_DTW_MAX_L`` in ops.py rise from 4096 to 16384 (L=16384, small w -> TP=32,
-~8.6 MB).
+``2 * TP * pad_len`` f32 with ``pad_len ~= 2L + Wb``, plus 2 frontier
+buffers (scratch for the blocked grid) and ~4 temporaries of ``TP * Wb`` —
+``(4L + ~8Wb) * TP * 4`` bytes.  TP=128, L=2048, w=205 (0.1L, Wb=512):
+~6.2 MB.  ``tile_p`` auto-shrinks (multiples of 8) to keep long series
+inside ``_VMEM_BUDGET``, which is what lets ``_DTW_MAX_L`` in ops.py sit at
+16384 (L=16384, small w -> TP=32, ~8.6 MB).
 """
 
 from __future__ import annotations
@@ -44,6 +74,10 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.dtw import band_step, row_block_policy
+from repro.kernels.tiling import pick_pair_tile, round_up
 
 Array = jax.Array
 
@@ -51,12 +85,13 @@ _INF = float(jnp.inf)
 _VMEM_BUDGET = 10 * 2**20          # bytes for packed operands + DP state
 
 
-def _round_up(x: int, m: int) -> int:
-    return -(-x // m) * m
-
-
 def _dtw_band_kernel(a2p_ref, b2p_ref, cut_ref, out_ref, *, L: int, w: int,
                      Wb: int):
+    """PR 1 baseline: one grid step per pair tile, per-step lane poisoning.
+
+    Kept as the ``early_exit=False`` path so the benchmark trajectory can
+    measure the row-block grid against it.
+    """
     a2p = a2p_ref[...]                                   # (TP, pad_len)
     b2p = b2p_ref[...]
     cut = cut_ref[...][:, None]                          # (TP, 1)
@@ -65,22 +100,7 @@ def _dtw_band_kernel(a2p_ref, b2p_ref, cut_ref, out_ref, *, L: int, w: int,
     kk = lax.broadcasted_iota(jnp.int32, (tp, Wb), 1)
 
     def step(d, carry):
-        d1, d2 = carry                                   # S_{d-1}, S_{d-2}
-        a_at = lax.dynamic_slice(a2p, (0, d), (tp, Wb))  # a[(d + k - w)//2]
-        b_at = lax.dynamic_slice(b2p, (0, 2 * L - 1 - d), (tp, Wb))
-        diff = a_at - b_at
-        cost = diff * diff
-        inf_col = jnp.full((tp, 1), _INF, dt)
-        dep_l = jnp.concatenate([inf_col, d1[:, :-1]], axis=-1)  # S_{d-1}[k-1]
-        dep_r = jnp.concatenate([d1[:, 1:], inf_col], axis=-1)   # S_{d-1}[k+1]
-        best = jnp.minimum(jnp.minimum(dep_l, dep_r), d2)
-        origin = (d == 0) & (kk == w)
-        nd = cost + jnp.where(origin, 0.0, best)
-        t = d + kk - w                                   # 2i
-        s = d - kk + w                                   # 2j
-        valid = ((t & 1) == 0) & (t >= 0) & (t <= 2 * L - 2) \
-            & (s >= 0) & (s <= 2 * L - 2) & (kk <= 2 * w)
-        nd = jnp.where(valid, nd, _INF)
+        nd, d1 = band_step(d, carry, a2p, b2p, kk, L=L, w=w)
         # every path crosses diagonal d or d-1 -> frontier min is a LB
         fmin = jnp.min(jnp.minimum(nd, d1), axis=-1, keepdims=True)
         dead = fmin > cut
@@ -93,8 +113,54 @@ def _dtw_band_kernel(a2p_ref, b2p_ref, cut_ref, out_ref, *, L: int, w: int,
     out_ref[...] = dlast[:, w]
 
 
+def _dtw_band_kernel_blocked(a2p_ref, b2p_ref, cut_ref, out_ref,
+                             s1_ref, s2_ref, live_ref, *, L: int, w: int,
+                             Wb: int, R: int):
+    """Row-block grid step: sweep ``R`` anti-diagonals iff the tile lives.
+
+    ``s1/s2`` carry the DP frontier across grid steps; ``live`` is the SMEM
+    liveness flag that turns a fully-poisoned tile's remaining blocks into
+    immediate returns.
+    """
+    j = pl.program_id(1)
+    n_blocks = pl.num_programs(1)
+    D = 2 * L - 1
+
+    @pl.when(j == 0)
+    def _reset():
+        s1_ref[...] = jnp.full(s1_ref.shape, _INF, s1_ref.dtype)
+        s2_ref[...] = jnp.full(s2_ref.shape, _INF, s2_ref.dtype)
+        live_ref[0] = 1
+
+    @pl.when(live_ref[0] == 1)
+    def _sweep():
+        a2p = a2p_ref[...]                               # (TP, pad_len)
+        b2p = b2p_ref[...]
+        cut = cut_ref[...][:, None]                      # (TP, 1)
+        tp = a2p.shape[0]
+        kk = lax.broadcasted_iota(jnp.int32, (tp, Wb), 1)
+        d0 = j * R
+        n_steps = jnp.minimum(R, D - d0)                 # last block is short
+
+        def step(t, carry):
+            return band_step(d0 + t, carry, a2p, b2p, kk, L=L, w=w)
+
+        d1, d2 = lax.fori_loop(0, n_steps, step, (s1_ref[...], s2_ref[...]))
+        # block-boundary abandon: min(S_d, S_{d-1}) lower-bounds final DTW
+        fmin = jnp.min(jnp.minimum(d1, d2), axis=-1, keepdims=True)
+        dead = fmin > cut
+        s1_ref[...] = jnp.where(dead, _INF, d1)
+        s2_ref[...] = jnp.where(dead, _INF, d2)
+        live_ref[0] = jnp.any(jnp.logical_not(dead)).astype(jnp.int32)
+
+    @pl.when(j == n_blocks - 1)
+    def _emit():
+        out_ref[...] = s1_ref[...][:, w]
+
+
 @functools.partial(
-    jax.jit, static_argnames=("w", "tile_p", "interpret")
+    jax.jit,
+    static_argnames=("w", "tile_p", "interpret", "early_exit", "row_block"),
 )
 def dtw_band_pallas(
     a: Array,
@@ -104,23 +170,30 @@ def dtw_band_pallas(
     *,
     tile_p: int = 128,
     interpret: bool = False,
+    early_exit: bool = True,
+    row_block: int | None = None,
 ) -> Array:
     """Pairwise banded DTW: ``(P, L), (P, L) -> (P,)`` squared-cost values.
 
     ``cutoff`` is an optional per-pair ``(P,)`` early-abandon threshold:
     pairs whose true distance is strictly below their cutoff return the
     exact value; others return ``>= cutoff`` (normally +inf).
+
+    ``early_exit`` selects the ``(pair_tile, row_block)`` grid whose
+    fully-poisoned tiles skip their remaining anti-diagonal blocks;
+    ``False`` runs PR 1's single-step grid with per-step lane poisoning
+    (same results, no block skipping).  ``row_block`` overrides the
+    ``row_block_policy(L)`` block size (testing/benchmarks).
     """
     P, L = a.shape
     if w is None or w >= L:
         w = L
     wb = min(w, L - 1)                 # |i - j| <= L - 1 always holds
-    Wb = _round_up(2 * wb + 1, 128)
-    pad_len = _round_up(2 * L + Wb + wb, 128)
+    Wb = round_up(2 * wb + 1, 128)
+    pad_len = round_up(2 * L + Wb + wb, 128)
     # auto-shrink the pair tile so packed operands + state fit VMEM
     per_row = (2 * pad_len + 8 * Wb) * 4
-    tile_p = min(tile_p, max(8, (_VMEM_BUDGET // per_row) // 8 * 8))
-    tile_p = min(tile_p, _round_up(P, 8))
+    tile_p = pick_pair_tile(tile_p, P, per_row, _VMEM_BUDGET)
     if cutoff is None:
         cutoff = jnp.full((P,), _INF, a.dtype)
     else:
@@ -129,7 +202,10 @@ def dtw_band_pallas(
     if pp:
         a = jnp.pad(a, ((0, pp), (0, 0)))
         b = jnp.pad(b, ((0, pp), (0, 0)))
-        cutoff = jnp.pad(cutoff, (0, pp), constant_values=_INF)
+        # pad lanes get a -inf cutoff so they die at the first abandon
+        # check — a +inf cutoff would keep them alive forever and pin the
+        # liveness flag up, disabling early exit for the remainder tile
+        cutoff = jnp.pad(cutoff, (0, pp), constant_values=-_INF)
     Pp = P + pp
     # host-side band packing: a2p[wb + t] = a[t//2], b2p[wb + t] = b[(2L-1-t)//2]
     a2 = jnp.repeat(a, 2, axis=-1)
@@ -138,16 +214,39 @@ def dtw_band_pallas(
     zr = jnp.zeros((Pp, pad_len - wb - 2 * L), a.dtype)
     a2p = jnp.concatenate([zl, a2, zr], axis=-1)         # (Pp, pad_len)
     b2p = jnp.concatenate([zl, b2f, zr], axis=-1)
+    if not early_exit:
+        out = pl.pallas_call(
+            functools.partial(_dtw_band_kernel, L=L, w=wb, Wb=Wb),
+            grid=(Pp // tile_p,),
+            in_specs=[
+                pl.BlockSpec((tile_p, pad_len), lambda i: (i, 0)),
+                pl.BlockSpec((tile_p, pad_len), lambda i: (i, 0)),
+                pl.BlockSpec((tile_p,), lambda i: (i,)),
+            ],
+            out_specs=pl.BlockSpec((tile_p,), lambda i: (i,)),
+            out_shape=jax.ShapeDtypeStruct((Pp,), a.dtype),
+            interpret=interpret,
+        )(a2p, b2p, cutoff)
+        return out[:P]
+    D = 2 * L - 1
+    R = row_block if row_block is not None else row_block_policy(L)
+    R = max(1, min(R, D))
+    n_blocks = -(-D // R)
     out = pl.pallas_call(
-        functools.partial(_dtw_band_kernel, L=L, w=wb, Wb=Wb),
-        grid=(Pp // tile_p,),
+        functools.partial(_dtw_band_kernel_blocked, L=L, w=wb, Wb=Wb, R=R),
+        grid=(Pp // tile_p, n_blocks),
         in_specs=[
-            pl.BlockSpec((tile_p, pad_len), lambda i: (i, 0)),
-            pl.BlockSpec((tile_p, pad_len), lambda i: (i, 0)),
-            pl.BlockSpec((tile_p,), lambda i: (i,)),
+            pl.BlockSpec((tile_p, pad_len), lambda i, j: (i, 0)),
+            pl.BlockSpec((tile_p, pad_len), lambda i, j: (i, 0)),
+            pl.BlockSpec((tile_p,), lambda i, j: (i,)),
         ],
-        out_specs=pl.BlockSpec((tile_p,), lambda i: (i,)),
+        out_specs=pl.BlockSpec((tile_p,), lambda i, j: (i,)),
         out_shape=jax.ShapeDtypeStruct((Pp,), a.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((tile_p, Wb), a.dtype),
+            pltpu.VMEM((tile_p, Wb), a.dtype),
+            pltpu.SMEM((1,), jnp.int32),
+        ],
         interpret=interpret,
     )(a2p, b2p, cutoff)
     return out[:P]

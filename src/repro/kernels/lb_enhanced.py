@@ -1,9 +1,23 @@
-"""Pallas TPU kernel: fused LB_ENHANCED^V blocks (paper Eq. 14 / Alg. 1).
+"""Pallas TPU kernel: fused LB_ENHANCED^V *cross blocks* (paper Eq. 14 /
+Alg. 1).
 
 The paper's contribution as a single fused kernel: for a ``(TQ, L)`` query
 tile against a ``(TC, L)`` candidate tile (plus the candidates' envelopes),
 each program emits the ``(TQ, TC)`` block of LB_ENHANCED^V bounds — elastic
 left/right band minima *and* the Keogh bridge in one VMEM round trip.
+
+Two kernel shapes serve LB_ENHANCED (see search/cascade.py DESIGN notes):
+
+  * **cross-block** (this file): ``(TQ, L) x (TC, L) -> (TQ, TC)`` — every
+    query row meets every candidate row.  The cascade uses it for the
+    all-pairs tiers (dense tier 2 and the bands-only tier 1 prefilter),
+    where the full (Q, N) bound matrix is the product.
+  * **pairwise** (lb_enhanced_pairwise.py): packed ``(P, L)`` batches in,
+    ``(P,)`` bounds out — row ``p`` of the query batch pairs with row
+    ``p`` of the candidate batch.  The staged cascade's tier-2 refinement
+    runs on *gather-compacted survivor pairs*, which is exactly this
+    diagonal shape; the cross-block kernel would pay ``TQ x TC`` work for
+    ``min(TQ, TC)`` answers there.
 
 Band structure (SS III): band ``i < nb`` is L-shaped with arm width
 ``i + 1 <= nb`` — because ``nb = min(L/2, W, V)`` is a small compile-time

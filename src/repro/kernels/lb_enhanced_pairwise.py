@@ -1,0 +1,112 @@
+"""Pallas TPU kernel: pairwise LB_ENHANCED^V over packed survivor batches.
+
+The staged cascade's tier-2 refinement (search/cascade.py) gather-compacts
+its survivors into *paired* ``(P, L)`` batches — row ``p`` of the query
+batch goes with row ``p`` of the candidate batch — which is the transpose
+of the problem the cross-block kernel (lb_enhanced.py) solves: there every
+query row meets every candidate row and the output is a ``(TQ, TC)``
+block.  Running the cross-block kernel on compacted survivors would pay
+``TQ x TC`` work for a diagonal's worth of answers, so this kernel
+specialises the *pairwise* shape instead: one ``(TP, L)`` tile of queries,
+candidates and candidate envelopes in, one ``(TP,)`` vector of bounds out,
+a single VMEM round trip per tile.
+
+Band structure is identical to the cross-block kernel (paper SS III):
+band ``i < nb`` is L-shaped with arm width ``i + 1 <= nb``, and because
+``nb = min(L/2, W, V)`` is a tiny compile-time constant the two arms
+unroll into ``O(nb^2)`` static column slices over the lane axis.  Unlike
+the cross-block kernel there is no per-query row loop — every band cell
+and the Keogh bridge are elementwise in the pair axis, so the whole tile
+is one batch of VPU ops.
+
+VMEM: q/c/u/lo are ``4 * TP * L`` f32 plus ``O(TP)`` accumulators.
+TP=128, L=4096 -> ~8.4 MB; ``tile_p`` auto-shrinks (multiples of 8) to
+stay inside ``_VMEM_BUDGET`` for longer series.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.tiling import pick_pair_tile
+
+Array = jax.Array
+
+_INF = float(jnp.inf)
+_VMEM_BUDGET = 8 * 2**20           # bytes for the four (TP, L) operands
+
+
+def _lb_enhanced_pairwise_kernel(
+    q_ref, c_ref, u_ref, l_ref, out_ref, *, nb: int, bands_only: bool
+):
+    q = q_ref[...]                                      # (TP, L)
+    c = c_ref[...]
+    L = q.shape[1]
+    acc = jnp.zeros((q.shape[0],), dtype=out_ref.dtype)
+    # --- elastic bands: unrolled static column slices (nb is tiny) ---
+    for bi in range(nb):
+        ir = L - 1 - bi
+        ml = jnp.full_like(acc, _INF)
+        mr = jnp.full_like(acc, _INF)
+        for t in range(bi + 1):
+            # left band bi: cells (a_{bi-t}, b_bi) and (a_bi, b_{bi-t})
+            dl1 = q[:, bi - t] - c[:, bi]
+            dl2 = q[:, bi] - c[:, bi - t]
+            ml = jnp.minimum(ml, jnp.minimum(dl1 * dl1, dl2 * dl2))
+            # right band (mirror around L-1)
+            dr1 = q[:, ir + t] - c[:, ir]
+            dr2 = q[:, ir] - c[:, ir + t]
+            mr = jnp.minimum(mr, jnp.minimum(dr1 * dr1, dr2 * dr2))
+        acc = acc + ml + mr
+    # --- Keogh bridge over [nb, L - nb) ---
+    if not bands_only:
+        qb = q[:, nb:L - nb]
+        over = jnp.maximum(qb - u_ref[:, nb:L - nb], 0.0)
+        under = jnp.maximum(l_ref[:, nb:L - nb] - qb, 0.0)
+        acc = acc + jnp.sum(over * over + under * under, axis=-1)
+    out_ref[...] = acc
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("w", "v", "bands_only", "tile_p", "interpret"),
+)
+def lb_enhanced_pairwise_pallas(
+    q: Array,
+    c: Array,
+    u: Array,
+    lo: Array,
+    w: int,
+    v: int,
+    *,
+    bands_only: bool = False,
+    tile_p: int = 128,
+    interpret: bool = False,
+) -> Array:
+    """``(P, L) x (P, L) -> (P,)`` pairwise LB_ENHANCED^V bounds."""
+    P, L = q.shape
+    nb = max(0, min(L // 2, w, v))
+    # auto-shrink the pair tile so the four operands fit VMEM
+    tile_p = pick_pair_tile(tile_p, P, 4 * L * 4, _VMEM_BUDGET)
+    pp = (-P) % tile_p
+    if pp:
+        q = jnp.pad(q, ((0, pp), (0, 0)))
+        c = jnp.pad(c, ((0, pp), (0, 0)))
+        u = jnp.pad(u, ((0, pp), (0, 0)), constant_values=_INF)
+        lo = jnp.pad(lo, ((0, pp), (0, 0)), constant_values=-_INF)
+    Pp = P + pp
+    out = pl.pallas_call(
+        functools.partial(
+            _lb_enhanced_pairwise_kernel, nb=nb, bands_only=bands_only
+        ),
+        grid=(Pp // tile_p,),
+        in_specs=[pl.BlockSpec((tile_p, L), lambda i: (i, 0))] * 4,
+        out_specs=pl.BlockSpec((tile_p,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((Pp,), q.dtype),
+        interpret=interpret,
+    )(q, c, u, lo)
+    return out[:P]

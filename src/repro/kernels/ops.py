@@ -23,6 +23,7 @@ from repro.kernels import ref
 from repro.kernels.dtw_band import dtw_band_pallas
 from repro.kernels.envelope import envelope_pallas
 from repro.kernels.lb_enhanced import lb_enhanced_pallas
+from repro.kernels.lb_enhanced_pairwise import lb_enhanced_pairwise_pallas
 from repro.kernels.lb_keogh import lb_keogh_pallas
 from repro.kernels.mamba_scan import mamba_scan_pallas
 
@@ -72,17 +73,43 @@ def lb_enhanced_op(
     )
 
 
+def lb_enhanced_pairwise_op(
+    q: Array, c: Array, u: Array, lo: Array, w: int, v: int,
+    *, bands_only: bool = False,
+) -> Array:
+    """``(P, L) x (P, L) -> (P,)`` pairwise LB_ENHANCED^V bounds.
+
+    The staged cascade's tier-2 shape: gather-compacted (query, candidate)
+    survivor pairs, one bound per packed row (see
+    kernels/lb_enhanced_pairwise.py vs the cross-block lb_enhanced.py).
+    """
+    if q.shape[-1] > _LB_MAX_L:
+        return ref.lb_enhanced_pairwise_ref(
+            q, c, u, lo, w, v, bands_only=bands_only
+        )
+    return lb_enhanced_pairwise_pallas(
+        q, c, u, lo, w, v, bands_only=bands_only, interpret=_interpret()
+    )
+
+
 def dtw_band_op(
-    a: Array, b: Array, w: int | None = None, cutoff: Array | None = None
+    a: Array, b: Array, w: int | None = None, cutoff: Array | None = None,
+    *, early_exit: bool = True,
 ) -> Array:
     """Pairwise banded DTW ``(P, L) x (P, L) -> (P,)``.
 
     ``cutoff`` (optional, per-pair) early-abandons lanes whose running
     frontier minimum proves the distance exceeds it (returns +inf there).
+    With ``early_exit`` (default) the kernel runs the row-block grid that
+    skips whole anti-diagonal blocks once every lane in a pair tile is
+    abandoned; ``early_exit=False`` is PR 1's per-step lane-poisoning
+    sweep, kept for the benchmark trajectory.
     """
     if a.shape[-1] > _DTW_MAX_L:
         return ref.dtw_band_ref(a, b, w, cutoff)
-    return dtw_band_pallas(a, b, w, cutoff, interpret=_interpret())
+    return dtw_band_pallas(
+        a, b, w, cutoff, early_exit=early_exit, interpret=_interpret()
+    )
 
 
 # ---------------------------------------------------------------------------

@@ -15,6 +15,7 @@ import jax.numpy as jnp
 from repro.core import envelopes as _env
 from repro.core import lower_bounds as _lb
 from repro.core.dtw import dtw as _dtw_fn
+from repro.core.dtw import dtw_band_blocked as _dtw_blocked
 
 Array = jax.Array
 
@@ -43,18 +44,37 @@ def lb_enhanced_ref(
     return _lb.lb_enhanced_matrix(q, c, u, lo, w, v)
 
 
+def lb_enhanced_pairwise_ref(
+    q: Array, c: Array, u: Array, lo: Array, w: int, v: int,
+    *, bands_only: bool = False,
+) -> Array:
+    """Pairwise ``(P, L) x (P, L) -> (P,)`` LB_ENHANCED^V bounds.
+
+    The packed survivor layout of the staged cascade's tier 2: row ``p``
+    of the query batch pairs with row ``p`` of the candidate batch (the
+    diagonal of the cross-block shape, never the full block).
+    """
+    if bands_only:
+        fn = jax.vmap(_lb.lb_enhanced_bands, (0, 0, None, None))
+        return fn(q, c, w, v)
+    fn = jax.vmap(_lb.lb_enhanced_env, (0, 0, 0, 0, None, None))
+    return fn(q, c, u, lo, w, v)
+
+
 def dtw_band_ref(
-    a: Array, b: Array, w: int | None = None, cutoff: Array | None = None
+    a: Array, b: Array, w: int | None = None, cutoff: Array | None = None,
+    *, row_block: int | None = None,
 ) -> Array:
     """Pairwise banded DTW ``(P, L), (P, L) -> (P,)``.
 
     ``cutoff`` is an optional per-pair early-abandon threshold with the
     same semantics as the Pallas kernel: exact below the cutoff, ``>=
     cutoff`` (normally +inf) otherwise.  Abandon decisions are made on the
-    same per-anti-diagonal frontier as the kernel, so the two stay
-    oracle-comparable even at the abandon boundary.
+    same *row-block boundaries* as the kernel's early-exit grid (the
+    shared ``row_block_policy``), so the two stay oracle-comparable even
+    at the abandon boundary.
     """
     if cutoff is None:
         return jax.vmap(_dtw_fn, (0, 0, None))(a, b, w)
     cutoff = jnp.broadcast_to(jnp.asarray(cutoff, a.dtype), (a.shape[0],))
-    return jax.vmap(_dtw_fn, (0, 0, None, 0))(a, b, w, cutoff)
+    return _dtw_blocked(a, b, w, cutoff, row_block=row_block)

@@ -1,0 +1,22 @@
+"""Shared VMEM tile-sizing policy for the pair-batched kernels.
+
+Every pair-batched kernel (dtw_band, lb_enhanced_pairwise) tiles the pair
+axis in sublane multiples of 8 and auto-shrinks the tile so its per-pair
+VMEM footprint stays inside the kernel's budget — one policy, defined
+once, so a change to the floor or the rounding applies everywhere.
+"""
+
+from __future__ import annotations
+
+
+def round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def pick_pair_tile(tile_p: int, P: int, per_row_bytes: int,
+                   budget_bytes: int) -> int:
+    """Largest pair-tile <= ``tile_p`` (multiple of 8, floor 8) whose
+    ``per_row_bytes`` footprint fits ``budget_bytes``, clamped so a short
+    batch is a single tile."""
+    tile_p = min(tile_p, max(8, (budget_bytes // per_row_bytes) // 8 * 8))
+    return min(tile_p, round_up(P, 8))

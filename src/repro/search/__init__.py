@@ -4,6 +4,7 @@ from repro.search.cascade import (
     CascadeConfig,
     CascadeResult,
     bands_prefilter,
+    choose_survivor_budget,
     compute_bounds,
     staged_bounds,
 )
@@ -26,6 +27,7 @@ __all__ = [
     "bands_prefilter",
     "brute_force",
     "build_index",
+    "choose_survivor_budget",
     "classify",
     "compute_bounds",
     "kim_features",

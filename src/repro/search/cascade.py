@@ -32,27 +32,64 @@ Every returned entry is still a valid lower bound (non-survivors keep their
 tier-0/1 bound), so engine exactness is untouched; the budget only trades
 bound tightness for tier-2 work.  The engine (engine.py) verifies
 ascending-bound candidates with banded DTW until exactness is certified.
+
+DESIGN — two LB_ENHANCED kernel shapes, and when the cascade picks each:
+
+  * **cross-block** (kernels/lb_enhanced.py): ``(TQ, L) x (TC, L) ->
+    (TQ, TC)``.  Tiers 1 and the dense (unstaged) tier 2 are genuinely
+    all-pairs — every query meets every candidate — so the block shape
+    *is* the work.  ``compute_bounds``/``bands_prefilter`` route here.
+  * **pairwise** (kernels/lb_enhanced_pairwise.py): packed ``(P, L)``
+    query/candidate/envelope batches -> ``(P,)``.  Step 4's compacted
+    survivors are (query, candidate) *pairs* — the diagonal of a cross
+    block — so the staged tier 2 routes here (``cfg.pairwise_fn``): one
+    VMEM round trip per pair tile instead of a ``TQ x TC`` block per
+    ``min(TQ, TC)`` useful answers.  This packed layout is also what the
+    engine's flat verification scheduler and the DTW kernel's pair tiles
+    consume, so everything downstream of compaction shares one shape.
+
+Survivor budget (step 3): budgets come from a static set of power-of-two
+buckets (>= 64), so jit sees at most O(log N) distinct shapes.  When the
+inputs are concrete, ``choose_survivor_budget`` picks the bucket from the
+observed tier-0/1 pruning mass (how many candidates' cheap bounds fall
+below a verified upper bound on the k-th best); under tracing the static
+rule ``bucket(max(64, 4k, N/8))`` applies.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Callable, Sequence
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
 from jax import lax
 
-from repro.core import lower_bounds as _lb
 from repro.kernels import ref as kref
-from repro.kernels.ops import dtw_band_op, lb_enhanced_op
+from repro.kernels.ops import (
+    dtw_band_op,
+    lb_enhanced_op,
+    lb_enhanced_pairwise_op,
+)
 from repro.kernels.ref import dtw_band_ref
 from repro.search.index import DTWIndex, kim_features
 
 Array = jax.Array
 
 _INF = jnp.inf
+
+# Survivor budgets are drawn from power-of-two buckets (floor 64) so the
+# compacted tier-2 shapes — and therefore jit recompilations — stay bounded
+# at O(log N) regardless of how the adaptive selection moves between calls.
+_BUDGET_FLOOR = 64
+
+
+def _bucket_up(x: int) -> int:
+    """Round ``x`` up to the next power-of-two budget bucket (>= 64)."""
+    b = _BUDGET_FLOOR
+    while b < x:
+        b <<= 1
+    return b
 
 
 @dataclasses.dataclass(frozen=True)
@@ -71,8 +108,13 @@ class CascadeConfig:
         is orthogonal to the sharding being validated.
       staged: engine uses the staged pipeline (``staged_bounds``) instead of
         dense full-tier bounds.
-      survivor_budget: per-query tier-2 compaction width; ``None`` derives
-        ``max(64, 4k, N/8)`` (clamped to N).  Must stay static for tracing.
+      survivor_budget: per-query tier-2 compaction width; ``None`` derives a
+        power-of-two bucket from ``max(64, 4k, N/8)`` (clamped to N).  Must
+        stay static for tracing.
+      adaptive_budget: with ``survivor_budget=None`` and concrete (host)
+        inputs, let the engine pick the bucket from the observed tier-0/1
+        pruning mass (``choose_survivor_budget``) instead of the static
+        rule.  Under tracing the static rule silently applies.
     """
 
     w: int
@@ -82,9 +124,18 @@ class CascadeConfig:
     use_pallas: bool = True
     staged: bool = True
     survivor_budget: int | None = None
+    adaptive_budget: bool = True
 
     def lb_fn(self):
         return lb_enhanced_op if self.use_pallas else kref.lb_enhanced_ref
+
+    def pairwise_fn(self):
+        """Tier-2 refinement over packed (P, L) survivor pairs."""
+        return (
+            lb_enhanced_pairwise_op
+            if self.use_pallas
+            else kref.lb_enhanced_pairwise_ref
+        )
 
     def dtw_fn(self):
         return dtw_band_op if self.use_pallas else dtw_band_ref
@@ -92,7 +143,7 @@ class CascadeConfig:
     def budget(self, n: int, k: int = 1) -> int:
         if self.survivor_budget is not None:
             return max(1, min(n, self.survivor_budget))
-        return min(n, max(64, 4 * k, -(-n // 8)))
+        return min(n, _bucket_up(max(_BUDGET_FLOOR, 4 * k, -(-n // 8))))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -136,12 +187,65 @@ def _chunked(
     return jnp.concatenate(outs, axis=1) if len(outs) > 1 else outs[0]
 
 
-# Per-pair LB_ENHANCED for the compacted survivor batches.  A dedicated
-# pairwise Pallas kernel is a ROADMAP follow-on; the vmapped core math is
-# already O(L) per pair, which is what the compaction buys.
-_pairwise_enhanced = jax.vmap(
-    _lb.lb_enhanced_env, in_axes=(0, 0, 0, 0, None, None)
-)
+def choose_survivor_budget(
+    q: Array,
+    index: DTWIndex,
+    cfg: CascadeConfig,
+    k: int = 1,
+    *,
+    exclude: Array | None = None,
+    sample: int = 8,
+    safety: float = 2.0,
+) -> int:
+    """Pick a power-of-two survivor budget from tier-0/1 pruning mass.
+
+    Host-side (concrete inputs required): runs tiers 0/1 on a small query
+    sample, verifies each sample query's ``k`` best-bounded candidates with
+    banded DTW — their worst distance ``tau`` upper-bounds that query's
+    final k-th best — and counts candidates whose cheap bound falls below
+    ``tau``.  That count is the tier-2 survivor mass the budget must cover
+    for refinement to reach every candidate the engine could still verify;
+    the max over the sample (times ``safety``) is rounded up to the next
+    power-of-two bucket, so jit sees at most O(log N) distinct compacted
+    shapes across calls (bounded recompilation).  The result is capped at
+    4x the static rule's bucket: on loose-bound data the mass estimate
+    approaches N, and an uncapped budget would silently restore the dense
+    tier-2 cost the staging exists to avoid.
+
+    ``exclude`` mirrors ``nn_search``'s per-query leave-one-out exclusion;
+    without it a self-match candidate yields ``tau = 0`` and collapses the
+    estimate to the floor.
+
+    Cost: one tier-0/1 pass over the sample plus ``S * k`` uncut DTW
+    verifications, and a host sync on the mass count.  The engine memoises
+    the chosen bucket per (index, config, k) so repeated searches pay this
+    once; the sample DTWs are estimator overhead outside the ``n_dtw``
+    pruning-power metric (which counts the verification loop only).
+
+    Raises ``jax.errors.ConcretizationTypeError`` under tracing — callers
+    (engine.py) catch tracers beforehand and keep the static bucketed rule.
+    """
+    n = index.n
+    k = min(k, n)
+    q = jnp.asarray(q, jnp.float32)
+    S = min(sample, q.shape[0])
+    qs = q[:S]
+    kim = (
+        lb_kim_tier(qs, index) if cfg.use_kim
+        else jnp.zeros((S, n), qs.dtype)
+    )
+    lb01 = jnp.maximum(kim, bands_prefilter(qs, index, cfg))
+    if exclude is not None:
+        lb01 = lb01.at[jnp.arange(S), exclude[:S]].set(_INF)
+    _, cand = lax.top_k(-lb01, k)                    # (S, k) best-bounded
+    qrep = jnp.repeat(qs, k, axis=0)
+    d = cfg.dtw_fn()(qrep, index.series[cand.reshape(-1)], cfg.w)
+    tau = jnp.max(d.reshape(S, k), axis=1, keepdims=True)
+    mass = jnp.sum(lb01 < tau, axis=1)               # per-query survivors
+    need = int(jnp.max(mass))                        # host sync (concrete)
+    static_cap = 4 * _bucket_up(max(_BUDGET_FLOOR, 4 * k, -(-n // 8)))
+    base = min(max(_BUDGET_FLOOR, 4 * k, int(need * safety)), static_cap)
+    return min(n, _bucket_up(base))
 
 
 def compute_bounds(
@@ -215,14 +319,15 @@ def staged_bounds(
     sel_key = lb01 if exclude is None else lb01.at[qarange, exclude].set(_INF)
     _, cand = lax.top_k(-sel_key, B)                 # ascending tier-0/1 bound
 
-    # ---- tier 2: fused LB_ENHANCED on the compacted batches -----------
+    # ---- tier 2: pairwise LB_ENHANCED kernel on the packed batches ----
+    pair_fn = cfg.pairwise_fn()
     chunk = min(cfg.candidate_chunk, B)
     cols = []
     for s in range(0, B, chunk):
         e = min(s + chunk, B)
         cidx = cand[:, s:e].reshape(-1)              # (Q * bc,)
         qf = jnp.repeat(q, e - s, axis=0)
-        pe = _pairwise_enhanced(
+        pe = pair_fn(
             qf, index.series[cidx], index.upper[cidx], index.lower[cidx],
             cfg.w, cfg.v,
         )

@@ -30,6 +30,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import weakref
 from typing import Callable
 
 import jax
@@ -38,12 +39,28 @@ from jax import lax
 
 from repro.kernels.ops import dtw_band_op
 from repro.kernels.ref import dtw_band_ref
-from repro.search.cascade import CascadeConfig, compute_bounds, staged_bounds
+from repro.search.cascade import (
+    CascadeConfig,
+    choose_survivor_budget,
+    compute_bounds,
+    staged_bounds,
+)
 from repro.search.index import DTWIndex
 
 Array = jax.Array
 
 _INF = jnp.inf
+
+# Adaptive-budget memo: choose_survivor_budget costs one tier-0/1 pass plus
+# S*k uncut DTWs, so the chosen bucket is cached per (index, config, k) and
+# re-estimated only when the store or config changes.  Entries hold a
+# weakref to the series array and are only hits while that exact array is
+# alive — a freed buffer whose id() gets reused cannot inherit a stale
+# budget.  Note the estimator's sample DTWs are *not* counted in
+# SearchResult.n_dtw — that metric is the paper's pruning-power numerator
+# and measures the engine verification loop.
+_BUDGET_CACHE: dict = {}
+_BUDGET_CACHE_MAX = 64
 
 
 @jax.tree_util.register_dataclass
@@ -106,13 +123,38 @@ def nn_search(
     N = index.n
     k = min(cfg.k, N)
     M = min(cfg.verify_chunk, N)
-    w = cfg.cascade.w
-    dtw_fn = dtw_band_op if cfg.cascade.use_pallas else dtw_band_ref
+    cascade = cfg.cascade
+    w = cascade.w
+    dtw_fn = dtw_band_op if cascade.use_pallas else dtw_band_ref
     qarange = jnp.arange(Q)
 
-    if cfg.cascade.staged:
+    # adaptive survivor budget: only on concrete (host) inputs — under
+    # jit/shard_map tracing the static bucketed rule applies unchanged
+    if (
+        cascade.staged
+        and cascade.adaptive_budget
+        and cascade.survivor_budget is None
+        and not isinstance(q, jax.core.Tracer)
+        and not isinstance(index.series, jax.core.Tracer)
+        and not isinstance(exclude, jax.core.Tracer)
+    ):
+        ckey = (id(index.series), N, cascade.w, cascade.v, cascade.use_kim,
+                cascade.use_pallas, k, exclude is not None)
+        hit = _BUDGET_CACHE.get(ckey)
+        if hit is not None and hit[0]() is index.series:
+            budget = hit[1]
+        else:
+            budget = choose_survivor_budget(
+                q, index, cascade, k, exclude=exclude
+            )
+            if len(_BUDGET_CACHE) >= _BUDGET_CACHE_MAX:
+                _BUDGET_CACHE.clear()
+            _BUDGET_CACHE[ckey] = (weakref.ref(index.series), budget)
+        cascade = dataclasses.replace(cascade, survivor_budget=budget)
+
+    if cascade.staged:
         cres = staged_bounds(
-            q, index, cfg.cascade, k=k, dtw_fn=dtw_fn, exclude=exclude
+            q, index, cascade, k=k, dtw_fn=dtw_fn, exclude=exclude
         )
         lb = cres.lb
         # seeds are already verified: warm-start the top-k with them and
@@ -123,7 +165,7 @@ def nn_search(
         n_dtw0 = jnp.full((Q,), k, jnp.int32)
         lb_order = lb.at[qarange[:, None], cres.seed_idx].set(_INF)
     else:
-        lb = compute_bounds(q, index, cfg.cascade, k=k)
+        lb = compute_bounds(q, index, cascade, k=k)
         best_d0 = jnp.full((Q, k), _INF, jnp.float32)
         best_i0 = jnp.full((Q, k), -1, jnp.int32)
         n_dtw0 = jnp.zeros((Q,), jnp.int32)

@@ -107,6 +107,81 @@ def test_dtw_band_kernel_cutoff_sweep(rng, P, L, w):
     assert np.all(got[0::2] >= np.array(cut)[0::2] - 1e-5)
 
 
+# ---------------------------------------------------------------------------
+# row-block early-exit grid (PR 2): skipped blocks never change results
+# ---------------------------------------------------------------------------
+
+# shapes hit multi-tile P, odd L, short last blocks, and R > D
+EARLY_EXIT_SWEEP = [
+    (9, 33, 8, 8), (130, 47, 11, 16), (5, 64, 16, 64), (12, 21, 5, 7),
+    (8, 40, 10, 200),
+]
+
+
+@pytest.mark.parametrize("P,L,w,R", EARLY_EXIT_SWEEP)
+def test_dtw_band_early_exit_matches_ref_and_legacy(rng, P, L, w, R):
+    from repro.kernels.dtw_band import dtw_band_pallas
+    a = jnp.array(rng.normal(size=(P, L)).astype(np.float32))
+    b = jnp.array(rng.normal(size=(P, L)).astype(np.float32))
+    plain = np.array(ref.dtw_band_ref(a, b, w))
+    cut = jnp.array(np.where(np.arange(P) % 2 == 0,
+                             plain * 0.5,
+                             plain * 2.0 + 1.0).astype(np.float32))
+    got = np.array(dtw_band_pallas(a, b, w, cut, row_block=R, interpret=True))
+    want = np.array(ref.dtw_band_ref(a, b, w, cut, row_block=R))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+    # the legacy per-step-poisoning kernel abandons the same lanes
+    legacy = np.array(dtw_band_pallas(a, b, w, cut, early_exit=False,
+                                      interpret=True))
+    np.testing.assert_allclose(got, legacy, rtol=1e-4, atol=1e-5)
+    # pairs whose true distance beats their cutoff stay exact even when
+    # other lanes in their tile are poisoned (skipping is tile-level)
+    np.testing.assert_allclose(got[1::2], plain[1::2], rtol=1e-4, atol=1e-5)
+    assert np.all(got[0::2] >= np.array(cut)[0::2] - 1e-5)
+
+
+def test_dtw_band_early_exit_lone_survivor(rng):
+    """A single surviving lane keeps its whole tile alive: no block may be
+    skipped while any lane still needs it."""
+    from repro.kernels.dtw_band import dtw_band_pallas
+    P, L, w = 16, 48, 12
+    a = jnp.array(rng.normal(size=(P, L)).astype(np.float32))
+    b = jnp.array(rng.normal(size=(P, L)).astype(np.float32))
+    plain = np.array(ref.dtw_band_ref(a, b, w))
+    cut_np = (plain * 1e-3).astype(np.float32)     # everyone abandons...
+    cut_np[7] = np.inf                             # ...except lane 7
+    cut = jnp.array(cut_np)
+    got = np.array(dtw_band_pallas(a, b, w, cut, row_block=8, interpret=True))
+    np.testing.assert_allclose(got[7], plain[7], rtol=1e-4, atol=1e-5)
+    assert np.all(np.isinf(np.delete(got, 7)))
+
+
+def test_dtw_band_early_exit_all_dead_tile(rng):
+    """A fully-poisoned tile returns +inf for every lane (the skipped
+    blocks' output path)."""
+    from repro.kernels.dtw_band import dtw_band_pallas
+    P, L, w = 8, 64, 16
+    a = jnp.array(rng.normal(size=(P, L)).astype(np.float32))
+    b = jnp.array(rng.normal(size=(P, L)).astype(np.float32))
+    plain = np.array(ref.dtw_band_ref(a, b, w))
+    cut = jnp.array((plain * 1e-3).astype(np.float32))
+    got = np.array(dtw_band_pallas(a, b, w, cut, row_block=16, interpret=True))
+    assert np.all(np.isinf(got))
+    want = np.array(ref.dtw_band_ref(a, b, w, cut, row_block=16))
+    np.testing.assert_allclose(got, want)
+
+
+def test_dtw_band_early_exit_nocut_matches_plain(rng):
+    """Without a cutoff the row-block grid is the plain banded DTW."""
+    from repro.kernels.dtw_band import dtw_band_pallas
+    P, L, w = 9, 33, 8
+    a = jnp.array(rng.normal(size=(P, L)).astype(np.float32))
+    b = jnp.array(rng.normal(size=(P, L)).astype(np.float32))
+    got = np.array(dtw_band_pallas(a, b, w, interpret=True, row_block=8))
+    want = np.array(ref.dtw_band_ref(a, b, w))
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+
 def test_dtw_band_kernel_long_series_fallback(rng):
     """L beyond _DTW_MAX_L routes to the (cutoff-aware) jnp reference."""
     L = ops._DTW_MAX_L + 7
@@ -199,6 +274,37 @@ def test_staged_engine_with_exclude():
     bd, bi = brute_force(idx, q, 8, k=1, exclude=jnp.arange(6))
     np.testing.assert_allclose(np.array(res.dists), np.array(bd),
                                rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# adaptive bucketed survivor budget
+# ---------------------------------------------------------------------------
+
+def test_adaptive_budget_is_bucketed_and_exact():
+    from repro.search import choose_survivor_budget
+    ds, idx, _ = _setup()
+    cfg = EngineConfig(
+        cascade=CascadeConfig(w=8, adaptive_budget=True), verify_chunk=4, k=2,
+    )
+    b = choose_survivor_budget(ds.x_test, idx, cfg.cascade, k=2)
+    # clamped to n, or a power-of-two bucket >= 64: recompiles stay bounded
+    assert b == idx.n or (b >= 64 and (b & (b - 1)) == 0)
+    res = nn_search(idx, ds.x_test, cfg)
+    bd, _ = brute_force(idx, ds.x_test, 8, k=2)
+    np.testing.assert_allclose(np.array(res.dists), np.array(bd),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_static_budget_rule_is_bucketed():
+    """With survivor_budget=None the static rule emits power-of-two buckets
+    (clamped to n), never arbitrary N/8 widths."""
+    cfg = CascadeConfig(w=8)
+    for n, k in [(36, 1), (1000, 3), (5000, 1), (100000, 5), (63, 2)]:
+        b = cfg.budget(n, k)
+        assert b == n or (b >= 64 and (b & (b - 1)) == 0)
+        assert b <= n
+    # explicit budgets pass through un-bucketed (tests rely on tiny budgets)
+    assert CascadeConfig(w=8, survivor_budget=5).budget(1000) == 5
 
 
 # ---------------------------------------------------------------------------

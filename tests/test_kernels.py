@@ -51,6 +51,56 @@ def test_lb_enhanced_kernel(rng, Q, C, L, w, v, bands_only):
     np.testing.assert_allclose(np.array(got), np.array(want), rtol=1e-4, atol=1e-5)
 
 
+# pairwise survivor shape: odd L, L == 2*nb (empty bridge), tile-padding
+# remainders (P=130 spills the 128 tile; P=9 pads to the 8-sublane multiple)
+SHAPES_PAIRWISE = [
+    (1, 16, 4, 4), (9, 33, 7, 4), (130, 47, 11, 4), (8, 5, 4, 4),
+    (12, 21, 21, 8), (5, 64, 0, 4), (16, 128, 12, 0), (7, 4, 4, 4),
+]
+
+
+@pytest.mark.parametrize("P,L,w,v", SHAPES_PAIRWISE)
+@pytest.mark.parametrize("bands_only", [False, True])
+def test_lb_enhanced_pairwise_kernel(rng, P, L, w, v, bands_only):
+    q = jnp.array(rng.normal(size=(P, L)).astype(np.float32))
+    c = jnp.array(rng.normal(size=(P, L)).astype(np.float32))
+    u, lo = ops.envelope_op(c, w)
+    got = ops.lb_enhanced_pairwise_op(q, c, u, lo, w, v, bands_only=bands_only)
+    want = ref.lb_enhanced_pairwise_ref(q, c, u, lo, w, v,
+                                        bands_only=bands_only)
+    np.testing.assert_allclose(np.array(got), np.array(want),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_lb_enhanced_pairwise_matches_cross_block_diagonal(rng):
+    """The pairwise kernel is the diagonal of the cross-block kernel."""
+    P, L, w, v = 24, 48, 10, 4
+    q = jnp.array(rng.normal(size=(P, L)).astype(np.float32))
+    c = jnp.array(rng.normal(size=(P, L)).astype(np.float32))
+    u, lo = ops.envelope_op(c, w)
+    pair = ops.lb_enhanced_pairwise_op(q, c, u, lo, w, v)
+    block = ops.lb_enhanced_op(q, c, u, lo, w, v)
+    np.testing.assert_allclose(np.array(pair), np.array(block).diagonal(),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_lb_enhanced_pairwise_tile_sweep(rng):
+    """VMEM tile shrink: any pair-tile size gives identical bounds."""
+    from repro.kernels.lb_enhanced_pairwise import lb_enhanced_pairwise_pallas
+    P, L, w, v = 60, 40, 9, 4
+    q = jnp.array(rng.normal(size=(P, L)).astype(np.float32))
+    c = jnp.array(rng.normal(size=(P, L)).astype(np.float32))
+    u, lo = ops.envelope_op(c, w)
+    a = lb_enhanced_pairwise_pallas(q, c, u, lo, w, v, tile_p=8,
+                                    interpret=True)
+    b = lb_enhanced_pairwise_pallas(q, c, u, lo, w, v, tile_p=128,
+                                    interpret=True)
+    np.testing.assert_allclose(np.array(a), np.array(b), rtol=1e-6)
+    want = ref.lb_enhanced_pairwise_ref(q, c, u, lo, w, v)
+    np.testing.assert_allclose(np.array(b), np.array(want), rtol=1e-4,
+                               atol=1e-5)
+
+
 @pytest.mark.parametrize("P,L,w", SHAPES_DTW)
 def test_dtw_band_kernel(rng, P, L, w):
     a = jnp.array(rng.normal(size=(P, L)).astype(np.float32))
