@@ -25,6 +25,22 @@ PR 2 rows (the survivor hot path):
   * ``*_speedup_vs_pr1`` — derived ratios (PR 1 path time / new path
     time) so the trajectory is self-describing without cross-referencing
     old commits.
+
+PR 3 rows (scheduler observability — bound-ordered verification):
+  * ``sched_{bound,index}_L*_w*_tile_skip_rate`` — fraction of the DTW
+    kernel's (pair_tile, row_block) grid cells skipped on a verification
+    round's flat batch when it is packed in ascending-bound order
+    (``bound``, the engine default) vs the PR 2 stripe order (``index``).
+    Computed with the host-side liveness mirror
+    (core.dtw.dtw_band_death_blocks) at the kernel's real tile size and
+    row-block policy; the uplift is what converts the per-tile liveness
+    exit into an effective per-pair early exit, and should surface in the
+    ``dtw_band_ee_*_speedup_vs_pr1`` trajectory on real hardware.
+  * ``sched_{bound,index}_L*_w*_n_dtw`` — total engine verifications under
+    each schedule on the same workload.  The schedule is a packing
+    permutation only, so these two must stay equal (the property tests
+    enforce per-query equality; the bench records the totals so the
+    trajectory proves it too).
 """
 
 from __future__ import annotations
@@ -55,6 +71,119 @@ _DTW_W_FRACTIONS = (0.05, 0.1, 0.3, 1.0)
 # early-exit sweep: smaller L so the interpret-mode kernels stay CI-cheap
 _DTW_EE_L = 256
 _DTW_EE_P = 16
+
+# scheduler observability: one engine workload, two packing schedules
+_SCHED_L = 256
+_SCHED_Q = 16
+_SCHED_M = 32                      # verify_chunk -> P = Q*M = 512 flat slots
+_SCHED_W_FRACTIONS = (0.1, 0.3)
+
+
+def _sched_records() -> list[dict]:
+    """Tile-skip-rate + n_dtw rows for bound-ordered vs stripe packing.
+
+    Replays the engine's verification stream (fixed workload, every round
+    from cursor 0 to N, per-query k-th best threaded forward) and asks the
+    host-side liveness mirror how many (pair_tile, row_block) grid cells
+    the early-exit kernel would skip under each packing, aggregated over
+    the stream — round 0 is bound-tight almost everywhere, the doomed tail
+    the scheduler exists to cluster shows up from round 1 on.  Fully
+    deterministic (seeded data, no timing), so the committed values are
+    reproducible bit-for-bit in CI.  Uses the jnp DTW path for the search
+    itself (n_dtw semantics are dispatch-independent) so the row stays
+    CI-cheap.
+    """
+    import jax.numpy as jnp
+
+    from repro.core.dtw import (
+        dtw_band_death_blocks,
+        row_block_policy,
+        tile_skip_rate,
+    )
+    from repro.data import make_dataset
+    from repro.kernels.dtw_band import _VMEM_BUDGET
+    from repro.kernels.tiling import pick_pair_tile, round_up
+    from repro.search import (
+        CascadeConfig,
+        EngineConfig,
+        build_index,
+        default_plan,
+        nn_search,
+        staged_bounds,
+    )
+
+    recs = []
+    Q, L, M, k = _SCHED_Q, _SCHED_L, _SCHED_M, 1
+    ds = make_dataset(n_classes=4, n_train_per_class=48, n_test_per_class=4,
+                      length=L, seed=11)
+    q = jnp.asarray(ds.x_test[:Q])
+    for frac in _SCHED_W_FRACTIONS:
+        w = max(1, int(round(frac * L)))
+        idx = build_index(ds.x_train, w, ds.y_train)
+        cascade = CascadeConfig(w=w, use_pallas=False, survivor_budget=64)
+        ecfg = EngineConfig(cascade=cascade, verify_chunk=M, k=k)
+        for sched in ("bound", "index"):
+            res = nn_search(idx, q, ecfg,
+                            plan=default_plan(cascade, schedule=sched))
+            recs.append(dict(
+                name=f"sched_{sched}_L{L}_w{w}_n_dtw",
+                us_per_call=float(np.sum(np.array(res.n_dtw))),
+                derived="total verifications; schedule-invariant by design",
+            ))
+        # replay the verification stream round by round
+        cres = staged_bounds(q, idx, cascade, k=k)
+        qar = jnp.arange(Q)
+        kth = jnp.sort(cres.seed_d, axis=1)[:, k - 1]
+        lb_order = cres.lb.at[qar[:, None], cres.seed_idx].set(jnp.inf)
+        order = jnp.argsort(lb_order, axis=1)
+        slb = jnp.take_along_axis(lb_order, order, axis=1)
+        P = Q * M
+        N = idx.n
+        # kernel geometry: real tile size + row-block policy for this shape
+        wb = min(w, L - 1)
+        Wb = round_up(2 * wb + 1, 128)
+        pad_len = round_up(2 * L + Wb + wb, 128)
+        tile = pick_pair_tile(128, P, (2 * pad_len + 8 * Wb) * 4,
+                              _VMEM_BUDGET)
+        R = row_block_policy(L)
+        n_blocks = -(-(2 * L - 1) // R)
+        qi = jnp.arange(P) % Q
+        stripe = jnp.arange(P) // Q
+        skipped = {"bound": 0.0, "index": 0.0}
+        cells = 0
+        for rnd in range(-(-N // M)):
+            rank = jnp.minimum(rnd * M + stripe, N - 1)
+            cidx = order[qi, rank]
+            lbv = jnp.where(
+                (rnd * M + stripe < N) & jnp.isfinite(slb[qi, rank]),
+                slb[qi, rank], jnp.inf,
+            )
+            valid = jnp.isfinite(lbv)
+            qrows, crows = q[qi], idx.series[cidx]
+            nt = -(-P // tile)
+            # index schedule: stripe packing, live cutoff everywhere (PR 2)
+            death = dtw_band_death_blocks(qrows, crows, w, kth[qi])
+            skipped["index"] += tile_skip_rate(death, n_blocks, tile) * nt
+            # bound schedule: ascending-bound packing, invalid slots poisoned
+            perm = jnp.argsort(lbv)
+            cut = jnp.where(valid, kth[qi], -jnp.inf)
+            death = dtw_band_death_blocks(qrows[perm], crows[perm], w,
+                                          cut[perm])
+            skipped["bound"] += tile_skip_rate(death, n_blocks, tile) * nt
+            cells += nt
+            # thread the k-th best forward (cutoff +infs cannot improve it)
+            dd = ref.dtw_band_ref(qrows, crows, w, kth[qi])
+            dd = jnp.where(valid, dd, jnp.inf)
+            kth = jnp.minimum(kth, jnp.full((Q,), jnp.inf).at[qi].min(dd))
+        for sched in ("bound", "index"):
+            recs.append(dict(
+                name=f"sched_{sched}_L{L}_w{w}_tile_skip_rate",
+                us_per_call=skipped[sched] / cells,
+                derived=(f"skipped fraction of ({tile} pair-tile x "
+                         f"{n_blocks} row-block) grid over the whole "
+                         f"verification stream, P={P} per round"),
+            ))
+    return recs
 
 
 def kernel_records() -> list[dict]:
@@ -166,6 +295,9 @@ def kernel_records() -> list[dict]:
                 us_per_call=times[("pr1", ctag)] / times[("ee", ctag)],
                 derived="ratio: PR1 lane-poisoning sweep / row-block early exit",
             ))
+
+    # --- scheduler observability: bound-ordered vs stripe packing ---------
+    recs.extend(_sched_records())
     return recs
 
 

@@ -3,8 +3,10 @@
 Emulates an 8-device pod slice with host devices (the production 16x16 and
 2x16x16 meshes use the identical code path — see launch/dryrun.py --paper).
 The candidate store is sharded over 'data', queries over 'model'; each
-device runs the local cascade and the per-query top-k merges with one
-all_gather.
+device runs the local tier pipeline — with the *global survivor budget*
+(the default: per-shard compaction limits allocated in proportion to
+all-gathered tier-0/1 survivor mass, see search/distributed.py) — and the
+per-query top-k merges with one all_gather.
 
 Run: python examples/distributed_search.py   (sets XLA_FLAGS itself)
 """

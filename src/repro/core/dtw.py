@@ -158,6 +158,66 @@ def band_step(d, carry, a2p, b2p, kk, *, L: int, w: int):
     return nd, d1
 
 
+def _band_blocked_scan(
+    a: Array,
+    b: Array,
+    w: int | None,
+    cutoff: Array | None,
+    row_block: int | None,
+) -> tuple[Array, Array]:
+    """Shared row-block-checked band sweep: ``((P,) values, (P,) death)``.
+
+    The single definition of the blocked abandon schedule — the same block
+    boundaries, frontier test, and poisoning the Pallas kernel's early-exit
+    grid uses — consumed by both ``dtw_band_blocked`` (values) and
+    ``dtw_band_death_blocks`` (liveness mirror), so the two cannot drift.
+    ``death[p]`` is the index of the first row block whose boundary check
+    abandoned lane ``p`` (``n_blocks - 1`` for survivors).
+    """
+    P, L = a.shape
+    if w is None or w >= L:
+        w = L
+    wb = min(w, L - 1)
+    Wb = 2 * wb + 1
+    dt = a.dtype
+    if cutoff is None:
+        cutoff = jnp.full((P,), _INF, dt)
+    else:
+        cutoff = jnp.broadcast_to(jnp.asarray(cutoff, dt), (P,))
+    cut = cutoff[:, None]
+    R = row_block if row_block is not None else row_block_policy(L)
+    D = 2 * L - 1
+    n_blocks = -(-D // R)
+    pad_len = 2 * L + Wb + wb
+    a2 = jnp.repeat(a, 2, axis=-1)
+    b2f = jnp.flip(jnp.repeat(b, 2, axis=-1), axis=-1)
+    a2p = jnp.zeros((P, pad_len), dt).at[:, wb:wb + 2 * L].set(a2)
+    b2p = jnp.zeros((P, pad_len), dt).at[:, wb:wb + 2 * L].set(b2f)
+    kk = lax.broadcasted_iota(jnp.int32, (P, Wb), 1)
+
+    def step(carry, d):
+        (d1, d2), death, found = carry
+        nd, d1 = band_step(d, (d1, d2), a2p, b2p, kk, L=L, w=wb)
+        # abandon only at row-block boundaries (the kernel's grid layout)
+        check = ((d + 1) % R == 0) | (d == D - 1)
+        fmin = jnp.min(jnp.minimum(nd, d1), axis=-1, keepdims=True)
+        dead = check & (fmin > cut)
+        newly = dead[:, 0] & jnp.logical_not(found)
+        death = jnp.where(newly, d // R, death)
+        found = found | dead[:, 0]
+        nd = jnp.where(dead, _INF, nd)
+        d1 = jnp.where(dead, _INF, d1)
+        return ((nd, d1), death, found), None
+
+    init = (
+        (jnp.full((P, Wb), _INF, dt), jnp.full((P, Wb), _INF, dt)),
+        jnp.full((P,), n_blocks - 1, jnp.int32),
+        jnp.zeros((P,), bool),
+    )
+    ((dlast, _), death, _), _ = lax.scan(step, init, jnp.arange(D))
+    return dlast[:, wb], death
+
+
 @functools.partial(jax.jit, static_argnames=("w", "row_block"))
 def dtw_band_blocked(
     a: Array,
@@ -177,39 +237,53 @@ def dtw_band_blocked(
     monotone), but the decision *points* match the kernel exactly, which is
     what keeps the two bit-comparable at abandon boundaries.
     """
-    P, L = a.shape
-    if w is None or w >= L:
-        w = L
-    wb = min(w, L - 1)
-    Wb = 2 * wb + 1
-    dt = a.dtype
-    if cutoff is None:
-        cutoff = jnp.full((P,), _INF, dt)
-    else:
-        cutoff = jnp.broadcast_to(jnp.asarray(cutoff, dt), (P,))
-    cut = cutoff[:, None]
-    R = row_block if row_block is not None else row_block_policy(L)
-    D = 2 * L - 1
-    pad_len = 2 * L + Wb + wb
-    a2 = jnp.repeat(a, 2, axis=-1)
-    b2f = jnp.flip(jnp.repeat(b, 2, axis=-1), axis=-1)
-    a2p = jnp.zeros((P, pad_len), dt).at[:, wb:wb + 2 * L].set(a2)
-    b2p = jnp.zeros((P, pad_len), dt).at[:, wb:wb + 2 * L].set(b2f)
-    kk = lax.broadcasted_iota(jnp.int32, (P, Wb), 1)
+    values, _ = _band_blocked_scan(a, b, w, cutoff, row_block)
+    return values
 
-    def step(carry, d):
-        nd, d1 = band_step(d, carry, a2p, b2p, kk, L=L, w=wb)
-        # abandon only at row-block boundaries (the kernel's grid layout)
-        check = ((d + 1) % R == 0) | (d == D - 1)
-        fmin = jnp.min(jnp.minimum(nd, d1), axis=-1, keepdims=True)
-        dead = check & (fmin > cut)
-        nd = jnp.where(dead, _INF, nd)
-        d1 = jnp.where(dead, _INF, d1)
-        return (nd, d1), None
 
-    init = (jnp.full((P, Wb), _INF, dt), jnp.full((P, Wb), _INF, dt))
-    (dlast, _), _ = lax.scan(step, init, jnp.arange(D))
-    return dlast[:, wb]
+@functools.partial(jax.jit, static_argnames=("w", "row_block"))
+def dtw_band_death_blocks(
+    a: Array,
+    b: Array,
+    w: int | None = None,
+    cutoff: Array | None = None,
+    *,
+    row_block: int | None = None,
+) -> Array:
+    """(P,) index of the first row block whose boundary check abandons each
+    lane (``n_blocks - 1`` for lanes that never abandon).
+
+    The host-side mirror of the Pallas kernel's liveness schedule
+    (kernels/dtw_band.py): a pair tile executes row blocks until *every*
+    lane in it is dead, so a tile's last executed block is the max death
+    block over its lanes.  ``tile_skip_rate`` turns these per-lane death
+    blocks into the fraction of (tile, block) grid cells the early-exit
+    grid skips for a given pair packing — the scheduler observability
+    metric BENCH_kernels.json tracks for the bound-ordered vs unsorted
+    verification schedules.
+    """
+    _, death = _band_blocked_scan(a, b, w, cutoff, row_block)
+    return death
+
+
+def tile_skip_rate(death_blocks, n_blocks: int, tile_p: int) -> float:
+    """Fraction of (pair_tile, row_block) grid cells the early-exit grid
+    skips, given per-lane death blocks in *packed* order.
+
+    A tile runs blocks ``0..max(death_blocks over its lanes)`` and skips
+    the rest; pad lanes (short final tile) die at block 0 like the
+    kernel's -inf-cutoff padding, so they never hold a tile open.
+    """
+    import numpy as np
+
+    death = np.asarray(death_blocks)
+    pad = (-death.shape[0]) % tile_p
+    if pad:
+        death = np.concatenate([death, np.zeros(pad, death.dtype)])
+    last = death.reshape(-1, tile_p).max(axis=1)
+    n_tiles = last.shape[0]
+    skipped = (n_blocks - 1 - last).sum()
+    return float(skipped) / float(n_tiles * n_blocks)
 
 
 @functools.partial(jax.jit, static_argnames=("w",))

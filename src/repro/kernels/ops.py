@@ -26,6 +26,7 @@ from repro.kernels.lb_enhanced import lb_enhanced_pallas
 from repro.kernels.lb_enhanced_pairwise import lb_enhanced_pairwise_pallas
 from repro.kernels.lb_keogh import lb_keogh_pallas
 from repro.kernels.mamba_scan import mamba_scan_pallas
+from repro.kernels.tiling import apply_pair_perm
 
 Array = jax.Array
 
@@ -94,7 +95,7 @@ def lb_enhanced_pairwise_op(
 
 def dtw_band_op(
     a: Array, b: Array, w: int | None = None, cutoff: Array | None = None,
-    *, early_exit: bool = True,
+    *, early_exit: bool = True, perm: Array | None = None,
 ) -> Array:
     """Pairwise banded DTW ``(P, L) x (P, L) -> (P,)``.
 
@@ -104,7 +105,19 @@ def dtw_band_op(
     skips whole anti-diagonal blocks once every lane in a pair tile is
     abandoned; ``early_exit=False`` is PR 1's per-step lane-poisoning
     sweep, kept for the benchmark trajectory.
+
+    ``perm`` (optional, a permutation of ``arange(P)``) is a *pair-packing
+    gather*: operand rows are gathered by ``perm`` before the kernel and
+    outputs scattered back (kernels/tiling.py), so the caller chooses
+    which pairs share a pair tile — the engine's bound-ordered schedule
+    clusters doomed pairs so the tile-level early exit fires per cluster —
+    without the kernel, or the results, changing at all.
     """
+    if perm is not None:
+        return apply_pair_perm(
+            lambda x, y, c: dtw_band_op(x, y, w, c, early_exit=early_exit),
+            perm, a, b, cutoff,
+        )
     if a.shape[-1] > _DTW_MAX_L:
         return ref.dtw_band_ref(a, b, w, cutoff)
     return dtw_band_pallas(

@@ -16,6 +16,7 @@ from repro.core import envelopes as _env
 from repro.core import lower_bounds as _lb
 from repro.core.dtw import dtw as _dtw_fn
 from repro.core.dtw import dtw_band_blocked as _dtw_blocked
+from repro.kernels import tiling as _tiling
 
 Array = jax.Array
 
@@ -63,7 +64,7 @@ def lb_enhanced_pairwise_ref(
 
 def dtw_band_ref(
     a: Array, b: Array, w: int | None = None, cutoff: Array | None = None,
-    *, row_block: int | None = None,
+    *, row_block: int | None = None, perm: Array | None = None,
 ) -> Array:
     """Pairwise banded DTW ``(P, L), (P, L) -> (P,)``.
 
@@ -73,7 +74,17 @@ def dtw_band_ref(
     same *row-block boundaries* as the kernel's early-exit grid (the
     shared ``row_block_policy``), so the two stay oracle-comparable even
     at the abandon boundary.
+
+    ``perm`` mirrors the kernel op's pair-packing gather (gather rows,
+    compute, scatter back).  Lane results are independent of batch order,
+    so it is a semantic no-op here too — accepted so the engine can thread
+    one call shape through both the Pallas and the reference DTW paths.
     """
+    if perm is not None:
+        return _tiling.apply_pair_perm(
+            lambda x, y, c: dtw_band_ref(x, y, w, c, row_block=row_block),
+            perm, a, b, cutoff,
+        )
     if cutoff is None:
         return jax.vmap(_dtw_fn, (0, 0, None))(a, b, w)
     cutoff = jnp.broadcast_to(jnp.asarray(cutoff, a.dtype), (a.shape[0],))

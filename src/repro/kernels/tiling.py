@@ -1,16 +1,57 @@
-"""Shared VMEM tile-sizing policy for the pair-batched kernels.
+"""Shared VMEM tile-sizing and pair-packing policy for the pair-batched
+kernels.
 
 Every pair-batched kernel (dtw_band, lb_enhanced_pairwise) tiles the pair
 axis in sublane multiples of 8 and auto-shrinks the tile so its per-pair
 VMEM footprint stays inside the kernel's budget — one policy, defined
 once, so a change to the floor or the rounding applies everywhere.
+
+Pair-packing permutation: which lanes share a pair tile is a *scheduling*
+decision (the engine's bound-ordered verification schedule argsorts each
+round's flat batch so doomed pairs cluster into the same tiles — see
+search/engine.py), but the *mechanism* lives here: gather the operand rows
+by ``perm`` before the kernel, scatter the outputs back after.  Per-lane
+results are independent of tile composition, so the permutation is
+result-invariant by construction.
 """
 
 from __future__ import annotations
 
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
 
 def round_up(x: int, m: int) -> int:
     return -(-x // m) * m
+
+
+def permute_pairs(perm: Array, *arrays):
+    """Gather each array's pair axis (axis 0) by ``perm``; ``None`` entries
+    pass through (an absent per-pair operand, e.g. a missing cutoff)."""
+    return tuple(None if x is None else x[perm] for x in arrays)
+
+
+def unpermute_pairs(perm: Array, out: Array) -> Array:
+    """Scatter a packed kernel output back to pre-``perm`` pair order
+    (the inverse gather: ``result[perm[i]] = out[i]``)."""
+    return jnp.zeros_like(out).at[perm].set(out)
+
+
+def apply_pair_perm(fn, perm: Array, a: Array, b: Array,
+                    cutoff: Array | None) -> Array:
+    """The whole perm round trip for a pair-batched call: broadcast a
+    scalar cutoff to per-pair (scalars are legal without ``perm``, so they
+    must stay legal with it), gather the operands, run
+    ``fn(a, b, cutoff)``, scatter the output back.  One definition shared
+    by the Pallas op and the jnp reference so their ``perm=`` semantics
+    cannot diverge."""
+    if cutoff is not None:
+        cutoff = jnp.broadcast_to(jnp.asarray(cutoff, a.dtype),
+                                  (a.shape[0],))
+    pa, pb, pcut = permute_pairs(perm, a, b, cutoff)
+    return unpermute_pairs(perm, fn(pa, pb, pcut))
 
 
 def pick_pair_tile(tile_p: int, P: int, per_row_bytes: int,

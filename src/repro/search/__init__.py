@@ -1,4 +1,4 @@
-"""NN-DTW search engine: cascade pruning + exact verification."""
+"""NN-DTW search engine: tier-pipeline pruning + exact verification."""
 
 from repro.search.cascade import (
     CascadeConfig,
@@ -6,6 +6,8 @@ from repro.search.cascade import (
     bands_prefilter,
     choose_survivor_budget,
     compute_bounds,
+    enhanced_all_pairs,
+    run_plan,
     staged_bounds,
 )
 from repro.search.distributed import make_distributed_search, shard_index
@@ -17,22 +19,42 @@ from repro.search.engine import (
     nn_search,
 )
 from repro.search.index import DTWIndex, build_index, kim_features
+from repro.search.pipeline import (
+    BoundTier,
+    Compaction,
+    VerificationPlan,
+    default_plan,
+    dense_plan,
+    get_tier,
+    register_tier,
+    registered_tiers,
+)
 
 __all__ = [
+    "BoundTier",
     "CascadeConfig",
     "CascadeResult",
+    "Compaction",
     "DTWIndex",
     "EngineConfig",
     "SearchResult",
+    "VerificationPlan",
     "bands_prefilter",
     "brute_force",
     "build_index",
     "choose_survivor_budget",
     "classify",
     "compute_bounds",
+    "default_plan",
+    "dense_plan",
+    "enhanced_all_pairs",
+    "get_tier",
     "kim_features",
     "make_distributed_search",
     "nn_search",
+    "register_tier",
+    "registered_tiers",
+    "run_plan",
     "shard_index",
     "staged_bounds",
 ]

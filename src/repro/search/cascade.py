@@ -1,54 +1,67 @@
-"""Batched lower-bound cascade (TPU adaptation of UCR-suite cascading).
+"""Lower-bound cascade: the tier-pipeline executor.
 
-The paper's NN-DTW loop abandons candidates one at a time; a TPU wants the
-same *work-skipping* expressed as dense tiers (DESIGN.md SS3):
+DESIGN — vocabulary (defined in search/pipeline.py, executed here):
 
-  tier 0  LB_KIM        O(1)/pair   from precomputed index features
-  tier 1  LB bands      O(V^2)/pair elastic bands only (Alg. 1 lines 1-11)
-  tier 2  LB_ENHANCED   O(L)/pair   fused bands + Keogh bridge kernel
+  * **tier** (``BoundTier``): one bound stage with a *cost class* and a
+    *scope*.  The default plan is the paper's cascade expressed as data:
 
-Every tier is a valid lower bound, so the *running elementwise max* of the
-computed tiers is the tightest available bound per pair.
+      tier "kim"                O(1)/pair    all_pairs  index features
+      tier "bands"              O(V^2)/pair  all_pairs  bands (Alg. 1 1-11)
+      tier "enhanced_pairwise"  O(L)/pair    pairwise   bands+Keogh bridge
 
-Staged pipeline (``staged_bounds`` — Lemire's two-pass cascade,
-arXiv:0811.3301, adapted to dense batches): paying the O(L) tier-2 bound on
-every (query, candidate) pair wastes exactly the work the cascade exists to
-skip.  Instead:
+    Every tier is a valid lower bound, so the *running elementwise max* of
+    the executed tiers is the tightest available bound per pair — a loose
+    or reordered tier changes work, never correctness.
+  * **plan** (``VerificationPlan``): the ordered tier list + compaction +
+    verification schedule.  Adding a tier (a second bands pass at another
+    ``V``, a two-pass LB a la Lemire arXiv:0811.3301) or reordering tiers
+    is a plan edit — see pipeline.py's module docstring for the worked
+    ``register_tier`` example — not a cascade rewrite.
+  * **compaction** (``Compaction``): the single gather point between the
+    all-pairs and pairwise tiers: the ``B`` best-bounded candidates per
+    query (ascending running bound) are packed into dense ``(Q*chunk, L)``
+    row batches.  A ``limit_fn`` policy may cap, per query, how many packed
+    slots the pairwise tiers refine (the *global survivor budget*:
+    search/distributed.py all-gathers per-shard tier-0/1 minima inside its
+    ``limit_fn`` and returns each shard's mass-proportional share).
+    Unrefined slots keep their all-pairs bound — still valid, so the
+    policy trades bound tightness for tier work, never exactness.
+  * **schedule**: how the engine orders each verification round's flat
+    (query, candidate) batch — ``"bound"`` argsorts ascending by tightest
+    bound so doomed pairs cluster into the same DTW pair tiles (see
+    engine.py), ``"index"`` keeps the unsorted stripe packing.
 
-  1. tier 0 on all pairs (O(Q*N) total);
-  2. tier 1 (bands only) on all pairs (O(Q*N*V^2));
-  3. gather-compact the most promising ``B`` candidates per query
-     (ascending ``max(tier0, tier1)`` — a static *survivor budget*, so the
-     whole pipeline stays jit/shard_map-traceable) into dense batches;
-  4. tier 2 only on the compacted survivors (O(Q*B*L) instead of O(Q*N*L)),
-     scatter-maxed back into the bound matrix;
-  5. *provisional k-th best*: verify the k best-bounded candidates per
+Pipeline (``run_plan``):
+
+  1. all-pairs tiers in plan order, running max (O(Q*N) .. O(Q*N*V^2));
+  2. gather-compact the most promising ``B`` candidates per query into
+     packed batches (static budget, so the pipeline stays jit/shard_map-
+     traceable), optionally capped per query by the compaction policy;
+  3. pairwise tiers on the packed survivors only (O(Q*B*L) instead of
+     O(Q*N*L)), scatter-maxed back into the bound matrix;
+  4. *provisional k-th best*: verify the k best-bounded candidates per
      query with banded DTW — their k-th best distance ``tau`` upper-bounds
      the final k-th best, so the engine starts its loop already knowing
      that any pair whose bound exceeds ``tau`` can never enter the top-k
      (and threads ``tau`` into the DTW kernel's early-abandon cutoff).
 
-Every returned entry is still a valid lower bound (non-survivors keep their
-tier-0/1 bound), so engine exactness is untouched; the budget only trades
-bound tightness for tier-2 work.  The engine (engine.py) verifies
-ascending-bound candidates with banded DTW until exactness is certified.
-
-DESIGN — two LB_ENHANCED kernel shapes, and when the cascade picks each:
+DESIGN — two LB_ENHANCED kernel shapes, and which scope picks each:
 
   * **cross-block** (kernels/lb_enhanced.py): ``(TQ, L) x (TC, L) ->
-    (TQ, TC)``.  Tiers 1 and the dense (unstaged) tier 2 are genuinely
-    all-pairs — every query meets every candidate — so the block shape
-    *is* the work.  ``compute_bounds``/``bands_prefilter`` route here.
+    (TQ, TC)``.  ``all_pairs`` tiers are genuinely all-pairs — every query
+    meets every candidate — so the block shape *is* the work
+    (``bands_prefilter``/``enhanced_all_pairs`` route here).
   * **pairwise** (kernels/lb_enhanced_pairwise.py): packed ``(P, L)``
-    query/candidate/envelope batches -> ``(P,)``.  Step 4's compacted
-    survivors are (query, candidate) *pairs* — the diagonal of a cross
-    block — so the staged tier 2 routes here (``cfg.pairwise_fn``): one
-    VMEM round trip per pair tile instead of a ``TQ x TC`` block per
-    ``min(TQ, TC)`` useful answers.  This packed layout is also what the
-    engine's flat verification scheduler and the DTW kernel's pair tiles
-    consume, so everything downstream of compaction shares one shape.
+    query/candidate/envelope batches -> ``(P,)``.  Compacted survivors are
+    (query, candidate) *pairs* — the diagonal of a cross block — so
+    ``pairwise`` tiers route here (``cfg.pairwise_fn``): one VMEM round
+    trip per pair tile instead of a ``TQ x TC`` block per ``min(TQ, TC)``
+    useful answers.  This packed layout is also what the engine's flat
+    verification scheduler and the DTW kernel's pair tiles consume, so
+    everything downstream of compaction shares one shape — including the
+    distributed path's globally-budgeted batches.
 
-Survivor budget (step 3): budgets come from a static set of power-of-two
+Survivor budget (step 2): budgets come from a static set of power-of-two
 buckets (>= 64), so jit sees at most O(log N) distinct shapes.  When the
 inputs are concrete, ``choose_survivor_budget`` picks the bucket from the
 observed tier-0/1 pruning mass (how many candidates' cheap bounds fall
@@ -73,13 +86,18 @@ from repro.kernels.ops import (
 )
 from repro.kernels.ref import dtw_band_ref
 from repro.search.index import DTWIndex, kim_features
+from repro.search.pipeline import (
+    VerificationPlan,
+    default_plan,
+    dense_plan,
+)
 
 Array = jax.Array
 
 _INF = jnp.inf
 
 # Survivor budgets are drawn from power-of-two buckets (floor 64) so the
-# compacted tier-2 shapes — and therefore jit recompilations — stay bounded
+# compacted tier shapes — and therefore jit recompilations — stay bounded
 # at O(log N) regardless of how the adaptive selection moves between calls.
 _BUDGET_FLOOR = 64
 
@@ -100,15 +118,15 @@ class CascadeConfig:
       w: Sakoe-Chiba window.
       v: LB_ENHANCED speed-tightness parameter (paper SS III-A); the paper's
          recommended V=4 is the default.
-      use_kim: include the O(1) Kim tier.
+      use_kim: include the O(1) Kim tier in the default plans.
       candidate_chunk: candidates per fused-kernel invocation (VMEM tiling).
-      use_pallas: route tier 1/2 through the Pallas kernels (True) or the
-        pure-jnp references (False).  The jnp path is used when lowering the
-        distributed search for the multi-pod dry-run, where kernel dispatch
-        is orthogonal to the sharding being validated.
-      staged: engine uses the staged pipeline (``staged_bounds``) instead of
-        dense full-tier bounds.
-      survivor_budget: per-query tier-2 compaction width; ``None`` derives a
+      use_pallas: route the bound tiers through the Pallas kernels (True) or
+        the pure-jnp references (False).  The jnp path is used when lowering
+        the distributed search for the multi-pod dry-run, where kernel
+        dispatch is orthogonal to the sharding being validated.
+      staged: engine uses the staged tier pipeline (``run_plan`` over the
+        default plan) instead of dense full-tier bounds.
+      survivor_budget: per-query compaction width; ``None`` derives a
         power-of-two bucket from ``max(64, 4k, N/8)`` (clamped to N).  Must
         stay static for tracing.
       adaptive_budget: with ``survivor_budget=None`` and concrete (host)
@@ -130,7 +148,7 @@ class CascadeConfig:
         return lb_enhanced_op if self.use_pallas else kref.lb_enhanced_ref
 
     def pairwise_fn(self):
-        """Tier-2 refinement over packed (P, L) survivor pairs."""
+        """Pairwise-tier refinement over packed (P, L) survivor rows."""
         return (
             lb_enhanced_pairwise_op
             if self.use_pallas
@@ -148,11 +166,11 @@ class CascadeConfig:
 
 @dataclasses.dataclass(frozen=True)
 class CascadeResult:
-    """Staged-cascade output consumed by the engine.
+    """Tier-pipeline output consumed by the engine.
 
     Attributes:
-      lb: (Q, N) per-pair lower bounds (tier-0/1 everywhere, tier-2 on the
-        compacted survivors, exact DTW at the seed positions).
+      lb: (Q, N) per-pair lower bounds (all-pairs tiers everywhere,
+        pairwise tiers on the compacted survivors, exact DTW at the seeds).
       seed_idx: (Q, k) candidate ids verified for the provisional threshold.
       seed_d: (Q, k) their exact banded-DTW distances.
     """
@@ -199,26 +217,28 @@ def choose_survivor_budget(
 ) -> int:
     """Pick a power-of-two survivor budget from tier-0/1 pruning mass.
 
-    Host-side (concrete inputs required): runs tiers 0/1 on a small query
-    sample, verifies each sample query's ``k`` best-bounded candidates with
-    banded DTW — their worst distance ``tau`` upper-bounds that query's
-    final k-th best — and counts candidates whose cheap bound falls below
-    ``tau``.  That count is the tier-2 survivor mass the budget must cover
-    for refinement to reach every candidate the engine could still verify;
-    the max over the sample (times ``safety``) is rounded up to the next
-    power-of-two bucket, so jit sees at most O(log N) distinct compacted
-    shapes across calls (bounded recompilation).  The result is capped at
-    4x the static rule's bucket: on loose-bound data the mass estimate
-    approaches N, and an uncapped budget would silently restore the dense
-    tier-2 cost the staging exists to avoid.
+    Host-side (concrete inputs required): runs the cheap all-pairs tiers on
+    a small query sample, verifies each sample query's ``k`` best-bounded
+    candidates with banded DTW — their worst distance ``tau`` upper-bounds
+    that query's final k-th best — and counts candidates whose cheap bound
+    falls below ``tau``.  That count is the survivor mass the compaction
+    budget must cover for the pairwise tiers to reach every candidate the
+    engine could still verify; the max over the sample (times ``safety``)
+    is rounded up to the next power-of-two bucket, so jit sees at most
+    O(log N) distinct compacted shapes across calls (bounded
+    recompilation).  The result is capped at 4x the static rule's bucket:
+    on loose-bound data the mass estimate approaches N, and an uncapped
+    budget would silently restore the dense tier cost the pipeline exists
+    to avoid.
 
     ``exclude`` mirrors ``nn_search``'s per-query leave-one-out exclusion;
     without it a self-match candidate yields ``tau = 0`` and collapses the
     estimate to the floor.
 
-    Cost: one tier-0/1 pass over the sample plus ``S * k`` uncut DTW
+    Cost: one cheap-tier pass over the sample plus ``S * k`` uncut DTW
     verifications, and a host sync on the mass count.  The engine memoises
-    the chosen bucket per (index, config, k) so repeated searches pay this
+    the chosen bucket per (index, k, w, config) — see
+    ``pipeline.resolve_adaptive_budget`` — so repeated searches pay this
     once; the sample DTWs are estimator overhead outside the ``n_dtw``
     pruning-power metric (which counts the verification loop only).
 
@@ -249,19 +269,46 @@ def choose_survivor_budget(
 
 
 def compute_bounds(
-    q: Array, index: DTWIndex, cfg: CascadeConfig, *, k: int = 1
+    q: Array,
+    index: DTWIndex,
+    cfg: CascadeConfig,
+    *,
+    k: int = 1,
+    plan: VerificationPlan | None = None,
 ) -> Array:
     """(Q, N) tightest-available lower bound for every (query, candidate).
 
-    With ``cfg.staged`` this runs the staged pipeline (see module
-    docstring) and returns its bound matrix; otherwise every pair pays the
-    full O(L) tier (the seed behaviour, kept for diagnostics and as the
-    baseline the staged path is property-tested against).  Chunked over
-    candidates so each fused-kernel call matches the VMEM tiling documented
-    in kernels/lb_enhanced.py.
+    With ``cfg.staged`` this executes the (given or default) tier plan and
+    returns its bound matrix; otherwise it runs the *dense* plan — every
+    pair pays the full O(L) tier (the seed behaviour, kept for diagnostics
+    and as the baseline the staged pipeline is property-tested against).
+    Both paths are the same declarative machinery: a tier list folded with
+    a running elementwise max.
     """
     if cfg.staged:
-        return staged_bounds(q, index, cfg, k=k).lb
+        return run_plan(q, index, cfg, plan=plan, k=k).lb
+    q = jnp.asarray(q, jnp.float32)
+    plan = plan if plan is not None else dense_plan(cfg)
+    if plan.pairwise_tiers:
+        raise ValueError(
+            "dense (cfg.staged=False) bounds have no compaction stage to "
+            "feed pairwise tiers "
+            f"({[t.name for t in plan.pairwise_tiers]}); use a dense_plan "
+            "or enable staging"
+        )
+    lb = None
+    for tier in plan.all_pairs_tiers:
+        t = tier.fn(q, index, cfg)
+        lb = t if lb is None else jnp.maximum(lb, t)
+    if lb is None:
+        lb = jnp.zeros((q.shape[0], index.n), q.dtype)
+    return lb
+
+
+def enhanced_all_pairs(q: Array, index: DTWIndex, cfg: CascadeConfig) -> Array:
+    """(Q, N) dense O(L) LB_ENHANCED tier — the ``enhanced_dense`` tier's
+    bound fn.  Chunked over candidates so each fused-kernel call matches
+    the VMEM tiling documented in kernels/lb_enhanced.py."""
     n = index.n
     chunk = min(cfg.candidate_chunk, n)
     lb_fn = cfg.lb_fn()
@@ -277,28 +324,28 @@ def compute_bounds(
             cfg.v,
         )
 
-    lb = _chunked(tier2, n, chunk)
-    if cfg.use_kim:
-        lb = jnp.maximum(lb, lb_kim_tier(q, index))
-    return lb
+    return _chunked(tier2, n, chunk)
 
 
-def staged_bounds(
+def run_plan(
     q: Array,
     index: DTWIndex,
     cfg: CascadeConfig,
+    plan: VerificationPlan | None = None,
     k: int = 1,
     dtw_fn: Callable | None = None,
     *,
     exclude: Array | None = None,
 ) -> CascadeResult:
-    """Staged tier-0 -> threshold -> tier-1 -> compact -> tier-2 cascade.
+    """Execute a ``VerificationPlan``: all-pairs tiers -> compact ->
+    pairwise tiers -> seed verification.
 
-    Fully traceable (static survivor budget), so it works under ``jit`` and
-    inside the distributed ``shard_map``.  ``exclude`` removes a per-query
-    candidate (leave-one-out) from seeding and compaction; its bound entry
-    is left untouched for the engine to mask.
+    Fully traceable (static compaction width), so it works under ``jit``
+    and inside the distributed ``shard_map``.  ``exclude`` removes a
+    per-query candidate (leave-one-out) from seeding and compaction; its
+    bound entry is left untouched for the engine to mask.
     """
+    plan = plan if plan is not None else default_plan(cfg)
     q = jnp.asarray(q, jnp.float32)
     Q, L = q.shape
     n = index.n
@@ -307,33 +354,61 @@ def staged_bounds(
         dtw_fn = cfg.dtw_fn()
     qarange = jnp.arange(Q)
 
-    # ---- tier 0: O(1) Kim features ------------------------------------
-    kim = lb_kim_tier(q, index) if cfg.use_kim else jnp.zeros((Q, n), q.dtype)
+    # ---- all-pairs tiers, in plan order (running elementwise max) ------
+    lb01 = None
+    for tier in plan.all_pairs_tiers:
+        t = tier.fn(q, index, cfg)
+        lb01 = t if lb01 is None else jnp.maximum(lb01, t)
+    if lb01 is None:
+        lb01 = jnp.zeros((Q, n), q.dtype)
 
-    # ---- tier 1: bands-only on all pairs ------------------------------
-    bands = bands_prefilter(q, index, cfg)
-    lb01 = jnp.maximum(kim, bands)
-
-    # ---- gather-compact the B most promising survivors per query ------
-    B = cfg.budget(n, k)
-    sel_key = lb01 if exclude is None else lb01.at[qarange, exclude].set(_INF)
-    _, cand = lax.top_k(-sel_key, B)                 # ascending tier-0/1 bound
-
-    # ---- tier 2: pairwise LB_ENHANCED kernel on the packed batches ----
-    pair_fn = cfg.pairwise_fn()
-    chunk = min(cfg.candidate_chunk, B)
-    cols = []
-    for s in range(0, B, chunk):
-        e = min(s + chunk, B)
-        cidx = cand[:, s:e].reshape(-1)              # (Q * bc,)
-        qf = jnp.repeat(q, e - s, axis=0)
-        pe = pair_fn(
-            qf, index.series[cidx], index.upper[cidx], index.lower[cidx],
-            cfg.w, cfg.v,
+    pairwise_tiers = plan.pairwise_tiers
+    if pairwise_tiers:
+        # ---- compaction: gather the B most promising survivors ---------
+        comp = plan.compaction
+        B = comp.budget if comp.budget is not None else cfg.budget(n, k)
+        B = max(1, min(n, B))
+        sel_key = (
+            lb01 if exclude is None
+            else lb01.at[qarange, exclude].set(_INF)
         )
-        cols.append(pe.reshape(Q, e - s))
-    enh = jnp.concatenate(cols, axis=1) if len(cols) > 1 else cols[0]
-    lb = lb01.at[qarange[:, None], cand].max(enh)
+        if comp.limit_fn is None:
+            W, limit = B, None
+        else:
+            # static packed width leaves headroom above the uniform budget
+            # so the policy can over-allocate to a skewed shard; the
+            # per-query limits are traced values, the shapes are not
+            W = max(1, min(n, comp.width_scale * B))
+            limit = jnp.clip(
+                comp.limit_fn(sel_key, B, k), min(k, W), W
+            ).astype(jnp.int32)
+        _, cand = lax.top_k(-sel_key, W)             # ascending cheap bound
+
+        # ---- pairwise tiers on the packed survivor batches -------------
+        chunk = min(cfg.candidate_chunk, W)
+        cols = []
+        for s in range(0, W, chunk):
+            e = min(s + chunk, W)
+            cidx = cand[:, s:e].reshape(-1)          # (Q * bc,)
+            qf = jnp.repeat(q, e - s, axis=0)
+            crows = index.series[cidx]
+            urows = index.upper[cidx]
+            lrows = index.lower[cidx]
+            pe = None
+            for tier in pairwise_tiers:
+                t = tier.fn(qf, crows, urows, lrows, cfg)
+                pe = t if pe is None else jnp.maximum(pe, t)
+            block = pe.reshape(Q, e - s)
+            if limit is not None:
+                # slots past this query's allocation keep their cheap
+                # bound: -inf is the identity of the scatter-max below
+                slot = jnp.arange(s, e)[None, :]
+                block = jnp.where(slot < limit[:, None], block, -_INF)
+            cols.append(block)
+        enh = jnp.concatenate(cols, axis=1) if len(cols) > 1 else cols[0]
+        lb = lb01.at[qarange[:, None], cand].max(enh)
+    else:
+        lb = lb01
 
     # ---- provisional k-th best: verify the k best-bounded candidates --
     # Seeds are picked from the *refined* bound order, so the k seed
@@ -351,11 +426,28 @@ def staged_bounds(
     return CascadeResult(lb=lb, seed_idx=seed_idx, seed_d=seed_d)
 
 
+def staged_bounds(
+    q: Array,
+    index: DTWIndex,
+    cfg: CascadeConfig,
+    k: int = 1,
+    dtw_fn: Callable | None = None,
+    *,
+    exclude: Array | None = None,
+    plan: VerificationPlan | None = None,
+) -> CascadeResult:
+    """Execute the default (or given) staged tier plan — the historical
+    entry point; ``run_plan`` is the general executor it wraps."""
+    return run_plan(q, index, cfg, plan=plan, k=k, dtw_fn=dtw_fn,
+                    exclude=exclude)
+
+
 def bands_prefilter(q: Array, index: DTWIndex, cfg: CascadeConfig) -> Array:
     """(Q, N) bands-only tier (Alg. 1 lines 1-11) — the cheap pre-bound.
 
-    Used by the staged pipeline to pick tier-2 survivors before paying for
-    the O(L) bridge; on the roofline it is ~V^2/L of tier 2.
+    The ``bands`` tier's bound fn: picks compaction survivors before the
+    pipeline pays for the O(L) bridge; on the roofline it is ~V^2/L of the
+    pairwise tier.
     """
     n = index.n
     chunk = min(cfg.candidate_chunk, n)

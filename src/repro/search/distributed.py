@@ -6,14 +6,47 @@ Sharding contract (DESIGN.md SS6):
     axis that grows with corpus size, the paper's scaling bottleneck;
   * the query batch is sharded over the *model* axis — queries are
     independent, so this is embarrassing parallelism;
-  * each device runs the full cascade + verification engine on its local
-    shard, then the per-query top-k candidates are merged with a single
-    ``all_gather`` over the data axes (k * n_data_shards values per query —
-    tiny compared to the local work it summarises).
+  * each device runs the full tier pipeline + verification engine on its
+    local shard, then the per-query top-k candidates are merged with a
+    single ``all_gather`` over the data axes (k * n_data_shards values per
+    query — tiny compared to the local work it summarises).
 
-The communication volume is O(Q * k * shards) floats per search step —
-independent of both N and L — so the collective roofline term stays
-negligible at any corpus size (quantified in EXPERIMENTS.md SSRoofline).
+Global survivor budget (``global_budget=True``): the tier pipeline's
+compaction is per shard, and a purely *local* budget distributes pairwise
+refinement uniformly on skewed stores — a shard holding none of a query's
+plausible neighbours gets exactly as much bound tightening as the shard
+holding all of them, so the shard that decides the query's fate may enter
+verification with bounds far looser than the fleet could afford it.  The
+global budget reuses the pipeline's compaction primitive
+(cascade.run_plan + pipeline.Compaction.limit_fn) with a policy that spans
+the mesh:
+
+  1. each shard computes its all-pairs (tier-0/1) bounds locally and
+     ``all_gather``s two per-query scalars over the data axes: its k-th
+     smallest cheap bound, and its survivor *mass* — how many local
+     candidates beat the tightest shard's k-th minimum;
+  2. the uniform total budget ``D * B`` is split per query in proportion
+     to shard mass (float ceil share, clamped to the static packed width
+     ``2 * B``), so the shard that holds the real neighbourhood refines
+     up to twice the uniform share while empty shards drop to the floor;
+  3. each shard's packed pairwise batch then flows through the existing
+     ``lb_enhanced_pairwise`` layout unchanged — the allocation is a
+     per-query *refine limit* over the packed slots, not a new shape.
+
+Shapes stay trace-static, so what moves across shards is bound
+*tightness*, not FLOPs: every shard still computes the ``2 * B`` packed
+width (masked slots keep their tier-0/1 bound — still a valid lower
+bound, so exactness of the merged result never depends on the policy;
+tested against single-device brute force on skewed shards).  The realised
+savings land downstream, where tighter bounds on the heavy shard mean
+fewer DTW verifications and earlier kernel abandons; teaching the
+pairwise kernel to skip masked slots outright (the same liveness
+mechanism the DTW tiles use) is the ROADMAP follow-up.
+
+The communication volume is O(Q * shards) scalars for the budget exchange
+plus O(Q * k * shards) floats for the top-k merge — independent of both N
+and L — so the collective roofline term stays negligible at any corpus
+size (quantified in EXPERIMENTS.md SSRoofline).
 
 Known limitation (jax 0.4.x): wrapping the returned step in an *outer*
 ``jax.jit`` miscompiles the engine's data-dependent verification
@@ -21,13 +54,14 @@ Known limitation (jax 0.4.x): wrapping the returned step in an *outer*
 drop candidates (reproduced against brute force at mesh (4, 2), N=256;
 ``check_rep=True`` is unavailable: 0.4.x has no replication rule for
 ``while``).  Call the returned step directly — it is already compiled
-per-shard and exactness-tested by tests/test_distributed.py.  Tracked in
-ROADMAP "Open items".
+per-shard and exactness-tested by tests/test_distributed.py, and the
+repro is pinned as a strict-xfail there so a container jax that fixes it
+(>= 0.6) flags the workaround for removal.
 """
 
 from __future__ import annotations
 
-import functools
+import dataclasses
 from typing import Sequence
 
 import jax
@@ -35,9 +69,9 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.search.cascade import CascadeConfig
 from repro.search.engine import EngineConfig, nn_search
 from repro.search.index import DTWIndex
+from repro.search.pipeline import Compaction, default_plan, dense_plan
 
 Array = jax.Array
 
@@ -55,12 +89,48 @@ def _combined_axis_index(axes: Sequence[str]) -> Array:
     return idx
 
 
+def global_budget_limit_fn(axes: tuple[str, ...]):
+    """Compaction ``limit_fn`` allocating one global budget across shards.
+
+    Returns a traceable ``(lb01, budget, k) -> (Q,)`` callback for use
+    *inside* ``shard_map`` over ``axes``: all-gathers each shard's
+    per-query k-th smallest tier-0/1 bound, takes the tightest shard's
+    value as the survivor threshold, all-gathers the per-shard survivor
+    mass under that threshold, and returns this shard's mass-proportional
+    share of the global ``D * budget`` (ceil division; ``run_plan`` clamps
+    it into ``[k, 2 * budget]``).  Excluded candidates arrive as +inf in
+    ``lb01`` and never count toward mass.
+    """
+
+    def limit_fn(lb01: Array, budget: int, k: int) -> Array:
+        n_local = lb01.shape[1]
+        kq = max(1, min(k, n_local))
+        neg, _ = lax.top_k(-lb01, kq)
+        kth_local = -neg[:, kq - 1]                    # (Q,) local k-th min
+        kth_all = lax.all_gather(kth_local, axes)      # (D, Q)
+        theta = jnp.min(kth_all, axis=0)               # tightest shard's
+        mass_local = jnp.sum(lb01 <= theta[:, None], axis=1)    # (Q,)
+        mass_all = lax.all_gather(mass_local, axes)    # (D, Q)
+        total = jnp.maximum(jnp.sum(mass_all, axis=0), 1)
+        n_shards = mass_all.shape[0]
+        # float share: the integer product n_shards * budget * mass would
+        # wrap int32 at production scale (256 data shards x budget 1024 x
+        # ~1e5 survivors) and pin the heaviest shard to the floor; the
+        # fraction is exact enough and run_plan clamps the result anyway
+        frac = mass_local.astype(jnp.float32) / total.astype(jnp.float32)
+        want = jnp.ceil(float(n_shards * budget) * frac)
+        return want.astype(jnp.int32)
+
+    return limit_fn
+
+
 def make_distributed_search(
     mesh: Mesh,
     cfg: EngineConfig,
     *,
     data_axes: tuple[str, ...] = ("data",),
     query_axis: str = "model",
+    global_budget: bool = True,
 ):
     """Build a jittable distributed search step for ``mesh``.
 
@@ -68,15 +138,28 @@ def make_distributed_search(
     mapping sharded index leaves + queries to ``(dists, idx, n_dtw)`` with
     the query axis sharded over ``query_axis``.  Candidate indices in the
     output are *global* (shard offset applied).
+
+    ``global_budget`` (staged cascades only) swaps the per-shard local
+    survivor budget for the mass-proportional global allocation described
+    in the module docstring; ``False`` keeps fully-local compaction.
     """
     axes = tuple(data_axes)
+    use_global = global_budget and cfg.cascade.staged
+    plan = (
+        default_plan(cfg.cascade) if cfg.cascade.staged
+        else dense_plan(cfg.cascade)
+    )
+    if use_global:
+        plan = dataclasses.replace(
+            plan, compaction=Compaction(limit_fn=global_budget_limit_fn(axes))
+        )
 
     def local_step(series, labels, upper, lower, kim, kim_ok, queries):
         index = DTWIndex(
             series=series, labels=labels, upper=upper, lower=lower,
             kim=kim, kim_ok=kim_ok, w=cfg.cascade.w,
         )
-        res = nn_search(index, queries, cfg)
+        res = nn_search(index, queries, cfg, plan=plan)
         n_local = series.shape[0]
         gidx = res.idx + (_combined_axis_index(axes) * n_local).astype(jnp.int32)
         # merge local top-k across the data axes

@@ -3,19 +3,36 @@
 TPU adaptation of the paper's sequential early-abandon NN loop
 (DESIGN.md SS3): instead of visiting candidates one at a time, the engine
 
-  1. computes per-pair lower bounds with the staged cascade (cascade.py):
-     Kim tier -> provisional k-th best from k verified seeds -> bands tier
-     -> compacted LB_ENHANCED on survivors (or the dense full-tier matrix
+  1. computes per-pair lower bounds by executing the verification plan's
+     tier pipeline (cascade.run_plan): all-pairs tiers -> compaction ->
+     pairwise tiers -> k verified seeds (or the dense full-tier matrix
      when ``cascade.staged`` is off),
   2. warm-starts the per-query top-k from the verified seeds and sorts the
      remaining candidates by ascending bound (UCR-suite ordering),
-  3. verifies banded DTW in fixed-size *rounds* of ``verify_chunk``
-     candidates, threading each query's current k-th best distance into the
-     kernel's per-pair ``cutoff`` so hopeless lanes abandon early
-     (PrunedDTW-style), and
+  3. verifies banded DTW in fixed-size *rounds*, threading each query's
+     current k-th best distance into the kernel's per-pair ``cutoff`` so
+     hopeless lanes abandon early (PrunedDTW-style), and
   4. stops a query as soon as its k-th best verified DTW is <= the smallest
      unverified bound — an *exactness certificate*: no remaining candidate
      can displace the current top-k, because bounds never exceed true DTW.
+
+Bound-ordered verification schedule (``plan.schedule == "bound"``): each
+round's flat batch of (query, candidate) slots is argsorted ascending by
+its tightest bound *before* packing into the DTW kernel's pair tiles; the
+engine composes the permutation into its slot->row gathers and scatters
+the (P,) results back (kernels/tiling.py — external callers get the same
+packing via the ops' ``perm=`` gather), so downstream accounting sees the
+original slot order.  The kernel's row-block early exit skips a tile's
+remaining anti-diagonal blocks only when *every* lane in the tile is
+abandoned — under the unsorted stripe packing a doomed pair almost always
+shares its tile with a live one, so the exit rarely fires.  Sorting
+clusters the doomed pairs (loosest bounds, Herrmann & Webb's early-abandon
+ordering, arXiv:2102.05221) into the same tiles, converting the per-tile
+exit into an effective per-pair early exit.  The permutation changes
+*packing only*: per-lane DTW values are independent of tile composition,
+so results are bit-identical and per-query ``n_dtw`` (computed in slot
+order from the same values) is unchanged — property-tested against the
+``"index"`` schedule and brute force.
 
 The cutoff never changes results: a lane abandons only when its frontier
 minimum proves the true distance exceeds the query's current k-th best, so
@@ -29,9 +46,6 @@ metric counts: ``P = 1 - n_dtw / N``.
 from __future__ import annotations
 
 import dataclasses
-import functools
-import weakref
-from typing import Callable
 
 import jax
 import jax.numpy as jnp
@@ -39,28 +53,23 @@ from jax import lax
 
 from repro.kernels.ops import dtw_band_op
 from repro.kernels.ref import dtw_band_ref
+from repro.kernels.tiling import unpermute_pairs
 from repro.search.cascade import (
     CascadeConfig,
-    choose_survivor_budget,
     compute_bounds,
-    staged_bounds,
+    run_plan,
 )
 from repro.search.index import DTWIndex
+from repro.search.pipeline import (
+    VerificationPlan,
+    default_plan,
+    dense_plan,
+    resolve_adaptive_budget,
+)
 
 Array = jax.Array
 
 _INF = jnp.inf
-
-# Adaptive-budget memo: choose_survivor_budget costs one tier-0/1 pass plus
-# S*k uncut DTWs, so the chosen bucket is cached per (index, config, k) and
-# re-estimated only when the store or config changes.  Entries hold a
-# weakref to the series array and are only hits while that exact array is
-# alive — a freed buffer whose id() gets reused cannot inherit a stale
-# budget.  Note the estimator's sample DTWs are *not* counted in
-# SearchResult.n_dtw — that metric is the paper's pruning-power numerator
-# and measures the engine verification loop.
-_BUDGET_CACHE: dict = {}
-_BUDGET_CACHE_MAX = 64
 
 
 @jax.tree_util.register_dataclass
@@ -108,6 +117,7 @@ def nn_search(
     cfg: EngineConfig,
     *,
     exclude: Array | None = None,
+    plan: VerificationPlan | None = None,
 ) -> SearchResult:
     """Exact k-NN-DTW for a batch of queries.
 
@@ -117,6 +127,10 @@ def nn_search(
       cfg: engine config; ``cfg.cascade.w`` is the DTW window.
       exclude: optional (Q,) candidate index to exclude per query
         (leave-one-out evaluation).
+      plan: verification plan (tier list + compaction policy + schedule);
+        ``None`` uses ``pipeline.default_plan(cfg.cascade)``.  The
+        distributed path passes a plan whose compaction ``limit_fn``
+        allocates the global survivor budget.
     """
     q = jnp.asarray(queries, jnp.float32)
     Q, L = q.shape
@@ -127,6 +141,12 @@ def nn_search(
     w = cascade.w
     dtw_fn = dtw_band_op if cascade.use_pallas else dtw_band_ref
     qarange = jnp.arange(Q)
+    if plan is None:
+        # dense engines bound every pair with the all-pairs tier list; a
+        # staged default would smuggle pairwise tiers into a path that has
+        # no compaction to feed them (compute_bounds rejects that loudly)
+        plan = default_plan(cascade) if cascade.staged \
+            else dense_plan(cascade)
 
     # adaptive survivor budget: only on concrete (host) inputs — under
     # jit/shard_map tracing the static bucketed rule applies unchanged
@@ -134,27 +154,17 @@ def nn_search(
         cascade.staged
         and cascade.adaptive_budget
         and cascade.survivor_budget is None
+        and plan.compaction.budget is None
         and not isinstance(q, jax.core.Tracer)
         and not isinstance(index.series, jax.core.Tracer)
         and not isinstance(exclude, jax.core.Tracer)
     ):
-        ckey = (id(index.series), N, cascade.w, cascade.v, cascade.use_kim,
-                cascade.use_pallas, k, exclude is not None)
-        hit = _BUDGET_CACHE.get(ckey)
-        if hit is not None and hit[0]() is index.series:
-            budget = hit[1]
-        else:
-            budget = choose_survivor_budget(
-                q, index, cascade, k, exclude=exclude
-            )
-            if len(_BUDGET_CACHE) >= _BUDGET_CACHE_MAX:
-                _BUDGET_CACHE.clear()
-            _BUDGET_CACHE[ckey] = (weakref.ref(index.series), budget)
+        budget = resolve_adaptive_budget(q, index, cascade, k, exclude)
         cascade = dataclasses.replace(cascade, survivor_budget=budget)
 
     if cascade.staged:
-        cres = staged_bounds(
-            q, index, cascade, k=k, dtw_fn=dtw_fn, exclude=exclude
+        cres = run_plan(
+            q, index, cascade, plan, k=k, dtw_fn=dtw_fn, exclude=exclude
         )
         lb = cres.lb
         # seeds are already verified: warm-start the top-k with them and
@@ -165,7 +175,7 @@ def nn_search(
         n_dtw0 = jnp.full((Q,), k, jnp.int32)
         lb_order = lb.at[qarange[:, None], cres.seed_idx].set(_INF)
     else:
-        lb = compute_bounds(q, index, cascade, k=k)
+        lb = compute_bounds(q, index, cascade, k=k, plan=plan)
         best_d0 = jnp.full((Q, k), _INF, jnp.float32)
         best_i0 = jnp.full((Q, k), -1, jnp.int32)
         n_dtw0 = jnp.zeros((Q,), jnp.int32)
@@ -190,6 +200,7 @@ def nn_search(
     T_max = min(N, 8 * M)
     jarange = jnp.arange(P)
     max_rounds = -(-Q * N // P) + 2
+    bound_sched = plan.schedule == "bound"
 
     def body(state):
         r, best_d, best_i, n_dtw, cursor, done = state
@@ -211,7 +222,22 @@ def nn_search(
         kth0 = best_d[:, k - 1]
         # thread each query's current k-th best into the kernel's per-pair
         # early-abandon cutoff: lanes that cannot beat it return +inf
-        d = dtw_fn(q[qi], index.series[cidx], w, kth0[qi])  # (P,) flat
+        if bound_sched:
+            # bound-ordered packing: argsort the flat batch ascending by
+            # its tightest bound so the loosest (most-doomed) pairs share
+            # pair tiles; invalid slots sort last (+inf bound) and get a
+            # -inf cutoff so they die at the first block boundary instead
+            # of pinning their tile's liveness flag.  The permutation is
+            # composed into the slot->row index gathers (one (P, L)
+            # gather per operand, same packing the ops' ``perm=`` gather
+            # would produce) and inverted on the (P,) output — everything
+            # below sees the original slot order.
+            perm = jnp.argsort(lbv)
+            cut = jnp.where(valid, kth0[qi], -_INF)[perm]
+            dp = dtw_fn(q[qi[perm]], index.series[cidx[perm]], w, cut)
+            d = unpermute_pairs(perm, dp)                 # (P,) flat
+        else:
+            d = dtw_fn(q[qi], index.series[cidx], w, kth0[qi])  # (P,)
         d = jnp.where(valid, d, _INF)
         # per-query gather of this round's results (stripe layout)
         t = jnp.arange(T_max)

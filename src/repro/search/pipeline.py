@@ -1,0 +1,328 @@
+"""Tier pipeline: the declarative vocabulary of the lower-bound cascade.
+
+The cascade used to be a hard-coded kim -> bands -> gather -> pairwise
+chain baked into ``search/cascade.py``; adding a tier (a two-pass LB, a
+second bands pass at a different ``V``) or reordering the existing ones
+meant rewriting the cascade.  This module factors the chain into three
+explicit, composable pieces (Lemire's two-pass argument, arXiv:0811.3301:
+bound tiers should *compose*, the pipeline should not care which bounds it
+is running):
+
+  * ``BoundTier`` — one bound stage: a name, a *cost class* (documentation
+    + bench label: "O(1)", "O(V^2)", "O(L)"), a *scope*, and the bound
+    function itself.  ``all_pairs`` tiers produce a dense ``(Q, N)`` matrix
+    over every (query, candidate); ``pairwise`` tiers refine only the
+    compacted survivor pack — packed ``(P, L)`` rows -> ``(P,)`` bounds,
+    the layout shared by the pairwise LB kernel, the engine's flat
+    verification scheduler, and the DTW kernel's pair tiles.
+  * ``Compaction`` — the single pipeline stage between the all-pairs and
+    pairwise tiers: gather the ``B`` best-bounded candidates per query
+    (ascending running bound) into packed batches.  Its *policy* decides
+    how much of the packed width each query may refine: the default refines
+    everything; a ``limit_fn`` callback computes per-query refine limits at
+    trace time, which is how the distributed path allocates one *global*
+    budget across shards (limits beyond the allocation keep their tier-0/1
+    bound — still valid, so exactness never depends on the policy).
+  * ``VerificationPlan`` — the ordered tier list + compaction + the
+    verification *schedule*.  ``schedule="bound"`` argsorts every
+    verification round's flat (query, candidate) batch ascending by its
+    tightest bound before packing it into DTW pair tiles, so doomed pairs
+    cluster into the same tiles and the kernel's per-tile liveness exit
+    fires per cluster instead of almost never; ``schedule="index"`` keeps
+    the unsorted stripe order (the PR 2 baseline the bench measures
+    against).  The schedule is a packing permutation only — results and
+    per-query ``n_dtw`` are invariant under it.
+
+Registering a custom tier (worked example — this exact pattern is
+exercised by tests/test_scheduler.py):
+
+    from repro.search import pipeline as pl
+
+    @pl.register_tier("bands_v2")
+    def bands_v2_tier() -> pl.BoundTier:
+        # a second, cheaper bands pass at V=2 in front of the V=4 one
+        def fn(q, index, cfg):
+            from repro.search.cascade import bands_prefilter
+            import dataclasses
+            return bands_prefilter(q, index, dataclasses.replace(cfg, v=2))
+        return pl.BoundTier("bands_v2", cost="O(V^2)", scope="all_pairs",
+                            fn=fn)
+
+    plan = pl.default_plan(cfg)
+    plan = dataclasses.replace(
+        plan, tiers=(pl.get_tier("kim"), pl.get_tier("bands_v2"),
+                     *plan.tiers[1:]))
+    nn_search(index, queries, ecfg, plan=plan)   # exactness is untouched
+
+Every tier must return a valid lower bound on ``DTW_w``; the executor
+(cascade.run_plan) keeps the running elementwise max, so a loose custom
+tier can only cost work, never correctness.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import weakref
+from typing import Callable
+
+import jax
+
+Array = jax.Array
+
+# ---------------------------------------------------------------------------
+# pipeline vocabulary
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class BoundTier:
+    """One composable bound stage of the cascade.
+
+    Attributes:
+      name: stable identifier (registry key, bench label).
+      cost: cost class per pair — documentation and bench labelling only
+        ("O(1)", "O(V^2)", "O(L)"); the executor does not interpret it.
+      scope: ``"all_pairs"`` (fn maps ``(q, index, cfg) -> (Q, N)`` bounds)
+        or ``"pairwise"`` (fn maps packed rows
+        ``(qrows, crows, urows, lrows, cfg) -> (P,)`` bounds over the
+        compacted survivors).
+      fn: the bound function for that scope.  Must return a valid lower
+        bound on ``DTW_w`` for every pair it scores.
+    """
+
+    name: str
+    cost: str
+    scope: str
+    fn: Callable
+
+    def __post_init__(self):
+        if self.scope not in ("all_pairs", "pairwise"):
+            raise ValueError(f"unknown tier scope: {self.scope!r}")
+
+
+@dataclasses.dataclass(frozen=True)
+class Compaction:
+    """Gather-compaction policy between all-pairs and pairwise tiers.
+
+    Attributes:
+      budget: static per-query packed width ``B`` override; ``None`` defers
+        to ``CascadeConfig.budget`` (static bucket rule / adaptive memo).
+      limit_fn: optional traceable callback ``(lb01, budget, k) -> (Q,)``
+        int limits: query ``i`` refines only its first ``limit[i]`` packed
+        slots (ascending tier-0/1 bound — the tightest survive), the rest
+        keep their tier-0/1 bound.  This is the *global survivor budget*
+        hook: the distributed path all-gathers per-shard tier-0/1 minima
+        inside ``limit_fn`` and returns this shard's mass-proportional
+        share.  ``None`` refines the full packed width.
+      width_scale: with a ``limit_fn`` the *static* packed width is
+        ``min(n, width_scale * B)`` so a skewed shard can be allocated more
+        than the uniform per-shard budget while shapes stay trace-static.
+        Note the pairwise tiers compute the full packed width and the
+        limit masks results — under tracing the FLOPs are the width, so
+        ``limit_fn`` redistributes bound *tightness*, not tier work (see
+        search/distributed.py for why that is still the right trade).
+    """
+
+    budget: int | None = None
+    limit_fn: Callable | None = None
+    width_scale: int = 2
+
+
+@dataclasses.dataclass(frozen=True)
+class VerificationPlan:
+    """Ordered tiers + compaction + verification schedule.
+
+    The executor (cascade.run_plan) runs the ``all_pairs`` tiers in order
+    (running elementwise max), compacts once, then runs the ``pairwise``
+    tiers on the packed survivors.  ``all_pairs`` tiers listed after a
+    ``pairwise`` tier are rejected — the pipeline has exactly one
+    compaction point.
+
+    ``schedule`` steers the engine's verification loop:
+      * ``"bound"``: each round's flat batch is argsorted ascending by its
+        tightest bound and the permutation is pushed into the DTW kernel's
+        pair-tile packing (kernels/ops.py ``perm=``) — doomed pairs land in
+        the same tiles, converting the per-tile liveness exit into an
+        effective per-pair early exit;
+      * ``"index"``: PR 2's unsorted stripe packing (bench baseline).
+    """
+
+    tiers: tuple[BoundTier, ...]
+    compaction: Compaction = Compaction()
+    schedule: str = "bound"
+
+    def __post_init__(self):
+        if self.schedule not in ("bound", "index"):
+            raise ValueError(f"unknown schedule: {self.schedule!r}")
+        seen_pairwise = False
+        for t in self.tiers:
+            if t.scope == "pairwise":
+                seen_pairwise = True
+            elif seen_pairwise:
+                raise ValueError(
+                    "all_pairs tier after a pairwise tier: the pipeline "
+                    f"has one compaction point (tier {t.name!r})"
+                )
+
+    @property
+    def all_pairs_tiers(self) -> tuple[BoundTier, ...]:
+        return tuple(t for t in self.tiers if t.scope == "all_pairs")
+
+    @property
+    def pairwise_tiers(self) -> tuple[BoundTier, ...]:
+        return tuple(t for t in self.tiers if t.scope == "pairwise")
+
+
+# ---------------------------------------------------------------------------
+# tier registry + the built-in tiers
+# ---------------------------------------------------------------------------
+
+_TIER_REGISTRY: dict[str, Callable[[], BoundTier]] = {}
+
+
+def register_tier(name: str):
+    """Decorator: register a zero-arg ``BoundTier`` factory under ``name``."""
+
+    def deco(factory: Callable[[], BoundTier]):
+        _TIER_REGISTRY[name] = factory
+        return factory
+
+    return deco
+
+
+def get_tier(name: str) -> BoundTier:
+    try:
+        return _TIER_REGISTRY[name]()
+    except KeyError:
+        raise KeyError(
+            f"unknown tier {name!r}; registered: {sorted(_TIER_REGISTRY)}"
+        ) from None
+
+
+def registered_tiers() -> tuple[str, ...]:
+    return tuple(sorted(_TIER_REGISTRY))
+
+
+@register_tier("kim")
+def _kim_tier() -> BoundTier:
+    """O(1)/pair Kim bound from precomputed index features."""
+
+    def fn(q, index, cfg):
+        from repro.search.cascade import lb_kim_tier
+
+        return lb_kim_tier(q, index)
+
+    return BoundTier("kim", cost="O(1)", scope="all_pairs", fn=fn)
+
+
+@register_tier("bands")
+def _bands_tier() -> BoundTier:
+    """O(V^2)/pair elastic-bands tier (Alg. 1 lines 1-11)."""
+
+    def fn(q, index, cfg):
+        from repro.search.cascade import bands_prefilter
+
+        return bands_prefilter(q, index, cfg)
+
+    return BoundTier("bands", cost="O(V^2)", scope="all_pairs", fn=fn)
+
+
+@register_tier("enhanced_pairwise")
+def _enhanced_pairwise_tier() -> BoundTier:
+    """O(L)/pair fused LB_ENHANCED^V over the packed survivor rows."""
+
+    def fn(qrows, crows, urows, lrows, cfg):
+        return cfg.pairwise_fn()(qrows, crows, urows, lrows, cfg.w, cfg.v)
+
+    return BoundTier("enhanced_pairwise", cost="O(L)", scope="pairwise",
+                     fn=fn)
+
+
+@register_tier("enhanced_dense")
+def _enhanced_dense_tier() -> BoundTier:
+    """O(L)/pair LB_ENHANCED^V on *all* pairs — the unstaged diagnostic
+    tier (cross-block kernel shape), bypassing compaction entirely."""
+
+    def fn(q, index, cfg):
+        from repro.search.cascade import enhanced_all_pairs
+
+        return enhanced_all_pairs(q, index, cfg)
+
+    return BoundTier("enhanced_dense", cost="O(L)", scope="all_pairs", fn=fn)
+
+
+def default_plan(cfg, *, schedule: str = "bound") -> VerificationPlan:
+    """The paper's staged cascade as a tier list: kim -> bands -> compact
+    -> pairwise LB_ENHANCED.  ``cfg.use_kim=False`` drops the Kim tier."""
+    tiers = []
+    if cfg.use_kim:
+        tiers.append(get_tier("kim"))
+    tiers.append(get_tier("bands"))
+    tiers.append(get_tier("enhanced_pairwise"))
+    return VerificationPlan(tiers=tuple(tiers), schedule=schedule)
+
+
+def dense_plan(cfg, *, schedule: str = "bound") -> VerificationPlan:
+    """The seed behaviour: every pair pays the full O(L) tier (diagnostics
+    and the baseline the staged pipeline is property-tested against)."""
+    tiers = []
+    if cfg.use_kim:
+        tiers.append(get_tier("kim"))
+    tiers.append(get_tier("enhanced_dense"))
+    return VerificationPlan(tiers=tuple(tiers), schedule=schedule)
+
+
+# ---------------------------------------------------------------------------
+# adaptive survivor-budget memo
+# ---------------------------------------------------------------------------
+
+# choose_survivor_budget costs one tier-0/1 pass plus S*k uncut DTWs, so the
+# chosen bucket is cached and re-estimated only when the store or the
+# query shape of the problem changes.  The key is explicit about what the
+# estimate depends on — the *index* (series identity + size), the window
+# ``w``, and ``k`` — plus the config knobs that change which bounds the
+# estimator runs.  A budget chosen for k=1 must never be reused for a
+# larger k: tau is the k-th seed distance, so the survivor mass grows with
+# k and a stale k=1 bucket would silently under-cover the refinement.
+# Entries hold a weakref to the series array and hit only while that exact
+# array is alive — a freed buffer whose id() gets reused cannot inherit a
+# stale budget.
+_BUDGET_CACHE: dict = {}
+_BUDGET_CACHE_MAX = 64
+
+
+def _budget_cache_key(index, cascade, k: int, exclude) -> tuple:
+    return (
+        id(index.series),            # index identity (validated by weakref)
+        index.n,                     # index size
+        cascade.w,                   # window the bounds are built for
+        k,                           # tau = k-th seed distance -> mass
+        cascade.v,
+        cascade.use_kim,
+        cascade.use_pallas,
+        exclude is not None,
+    )
+
+
+def budget_cache_clear() -> None:
+    _BUDGET_CACHE.clear()
+
+
+def budget_cache_len() -> int:
+    return len(_BUDGET_CACHE)
+
+
+def resolve_adaptive_budget(q, index, cascade, k: int, exclude) -> int:
+    """Memoised ``choose_survivor_budget`` — see ``_budget_cache_key`` for
+    exactly what the memo keys on.  Concrete (host) inputs only."""
+    from repro.search.cascade import choose_survivor_budget
+
+    ckey = _budget_cache_key(index, cascade, k, exclude)
+    hit = _BUDGET_CACHE.get(ckey)
+    if hit is not None and hit[0]() is index.series:
+        return hit[1]
+    budget = choose_survivor_budget(q, index, cascade, k, exclude=exclude)
+    if len(_BUDGET_CACHE) >= _BUDGET_CACHE_MAX:
+        _BUDGET_CACHE.clear()
+    _BUDGET_CACHE[ckey] = (weakref.ref(index.series), budget)
+    return budget

@@ -46,6 +46,94 @@ print("OK")
 """)
 
 
+def test_distributed_global_budget_skewed_shards():
+    """The global survivor budget: all shards exact on a store whose
+    near-neighbour mass lives entirely in shard 0, and the allocation
+    actually skews (shard 0 gets more than the uniform share, the far
+    shards drop toward the floor)."""
+    _run("""
+import numpy as np, jax, jax.numpy as jnp
+from jax import lax
+from repro.data import make_dataset
+from repro.search import (build_index, brute_force, EngineConfig, CascadeConfig,
+                          make_distributed_search, shard_index)
+from repro.search.distributed import global_budget_limit_fn
+from repro.distributed.sharding import shard_map_compat
+from jax.sharding import PartitionSpec as P
+from repro.launch.mesh import make_host_mesh
+mesh = make_host_mesh((4, 2), ("data", "model"))
+rng = np.random.default_rng(7)
+Q, L, N, w, k = 8, 64, 128, 12, 2
+queries = rng.normal(size=(Q, L)).astype(np.float32)
+near = np.repeat(queries, 4, axis=0) + 0.05 * rng.normal(size=(Q*4, L)).astype(np.float32)
+far = 5.0 + rng.normal(size=(N - Q*4, L)).astype(np.float32)
+series = np.concatenate([near, far], axis=0).astype(np.float32)
+idx = build_index(series, w)
+cfg = EngineConfig(cascade=CascadeConfig(w=w, v=4, candidate_chunk=32,
+                                         use_pallas=False, survivor_budget=8),
+                   verify_chunk=8, k=k)
+sidx = shard_index(mesh, idx, ("data",))
+step = make_distributed_search(mesh, cfg, data_axes=("data",),
+                               query_axis="model", global_budget=True)
+d, i, ndtw = step(sidx.series, sidx.labels, sidx.upper, sidx.lower,
+                  sidx.kim, sidx.kim_ok, jnp.asarray(queries))
+bd, _ = brute_force(idx, queries, w, k=k, use_pallas=False)
+assert np.allclose(np.array(d), np.array(bd), rtol=1e-4), "global budget != brute force"
+# probe the allocation itself: shard 0 (all the near mass) must be granted
+# more packed-refine slots than the far shards
+limit_fn = global_budget_limit_fn(("data",))
+def probe(series, q):
+    # squared-Euclidean distance as a stand-in cheap tier: the probe only
+    # exercises the allocation mechanics, which need some per-pair proxy
+    lb01 = jnp.sum((q[:, None, :] - series[None, :, :]) ** 2, axis=-1)
+    return limit_fn(lb01, 8, k)[None]
+probe_fn = shard_map_compat(probe, mesh=mesh,
+                            in_specs=(P(("data",), None), P(None, None)),
+                            out_specs=P(("data",), None))
+limits = np.array(probe_fn(sidx.series, jnp.asarray(queries)))   # (4, Q)
+assert limits[0].mean() > 8, f"skewed shard not over-allocated: {limits}"
+assert limits[1:].mean() < 8, f"far shards not under-allocated: {limits}"
+print("OK", limits.mean(axis=1))
+""")
+
+
+@pytest.mark.xfail(
+    strict=True,
+    reason=(
+        "jax 0.4.x miscompiles jit(shard_map(engine while_loop)): the "
+        "verification loop silently drops candidates (ROADMAP open item; "
+        "workaround: call the step unjitted).  Strict xfail so the day the "
+        "container jax (>= 0.6, jax.shard_map + vma checks) fixes it, this "
+        "XPASSes and CI flags the workaround + this pin for removal."
+    ),
+)
+def test_jit_shard_map_while_loop_drops_candidates():
+    """Pinned repro: mesh (4, 2), N=256, L=128, k=3 — outer jit of the
+    distributed step must equal brute force (it does not on jax 0.4.x)."""
+    _run("""
+import numpy as np, jax, jax.numpy as jnp
+from repro.data import make_dataset
+from repro.search import (build_index, brute_force, EngineConfig, CascadeConfig,
+                          make_distributed_search, shard_index)
+from repro.launch.mesh import make_host_mesh
+mesh = make_host_mesh((4, 2), ("data", "model"))
+ds = make_dataset(n_classes=4, n_train_per_class=64, n_test_per_class=1,
+                  length=128, seed=3)
+idx = build_index(ds.x_train, 16, ds.y_train)   # N = 256, L = 128
+cfg = EngineConfig(cascade=CascadeConfig(w=16, v=4, candidate_chunk=64,
+                                         use_pallas=False), verify_chunk=8, k=3)
+sidx = shard_index(mesh, idx, ("data",))
+step = make_distributed_search(mesh, cfg, data_axes=("data",), query_axis="model")
+q = jnp.asarray(ds.x_test)
+bd, _ = brute_force(idx, ds.x_test, 16, k=3, use_pallas=False)
+d, _, _ = jax.jit(step)(sidx.series, sidx.labels, sidx.upper, sidx.lower,
+                        sidx.kim, sidx.kim_ok, q)
+assert np.allclose(np.array(d), np.array(bd), rtol=1e-4), (
+    "jit(shard_map(while)) dropped candidates")
+print("OK")
+""")
+
+
 def test_distributed_search_multipod_axes():
     _run("""
 import numpy as np, jax, jax.numpy as jnp

@@ -1,0 +1,274 @@
+"""Tier-pipeline + bound-ordered-scheduler invariants.
+
+The contract under test (search/pipeline.py, search/cascade.py,
+search/engine.py, kernels/ops.py):
+  * the verification schedule is a pair-packing permutation only:
+    ``schedule="bound"`` returns results *bit-equal* to
+    ``schedule="index"`` and to brute force, and never increases any
+    query's ``n_dtw`` — across w in {0, 1, L/4, L}, k, chunkings, ragged
+    survivor budgets, and leave-one-out exclusion;
+  * the ``perm`` gather on the DTW ops is a semantic no-op;
+  * plans are declarative: tiers can be registered, added, and reordered
+    without touching the executor, and a custom tier that returns any
+    valid lower bound keeps the engine exact;
+  * the compaction ``limit_fn`` policy (the global-budget hook) trades
+    bound tightness only — never exactness or bound validity;
+  * the adaptive-budget memo keys on (index identity, k, w): changing any
+    of them re-estimates instead of reusing a stale bucket.
+"""
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.data import make_dataset
+from repro.kernels import ops, ref
+from repro.search import (
+    BoundTier,
+    CascadeConfig,
+    Compaction,
+    EngineConfig,
+    VerificationPlan,
+    bands_prefilter,
+    brute_force,
+    build_index,
+    default_plan,
+    get_tier,
+    nn_search,
+    register_tier,
+    run_plan,
+)
+from repro.search import pipeline as pl
+
+settings.register_profile("ci", max_examples=10, deadline=None)
+settings.load_profile("ci")
+
+L_TEST = 48
+
+
+def _setup(w=8, n_per=12, L=L_TEST, seed=0, k=1, chunk=16, verify=4, **ckw):
+    ds = make_dataset(n_classes=3, n_train_per_class=n_per,
+                      n_test_per_class=4, length=L, seed=seed)
+    idx = build_index(ds.x_train, w, ds.y_train)
+    cfg = EngineConfig(
+        cascade=CascadeConfig(w=w, v=4, candidate_chunk=chunk, **ckw),
+        verify_chunk=verify, k=k,
+    )
+    return ds, idx, cfg
+
+
+# ---------------------------------------------------------------------------
+# bound-ordered schedule: results bit-equal, n_dtw never worse
+# ---------------------------------------------------------------------------
+
+@given(
+    w=st.sampled_from([0, 1, L_TEST // 4, L_TEST]),
+    k=st.integers(1, 3),
+    verify=st.integers(1, 9),
+    budget=st.sampled_from([None, 1, 2, 5, 17]),
+    seed=st.integers(0, 1000),
+)
+def test_bound_schedule_exact_and_no_more_dtw(w, k, verify, budget, seed):
+    """For every (window, k, chunking, ragged budget, data): the
+    bound-ordered scheduler is bit-equal to brute force and to the
+    index-ordered scheduler, and per-query n_dtw never increases."""
+    ds, idx, cfg = _setup(w=w, seed=seed, k=k, verify=verify,
+                          survivor_budget=budget)
+    res_b = nn_search(idx, ds.x_test, cfg,
+                      plan=default_plan(cfg.cascade, schedule="bound"))
+    res_i = nn_search(idx, ds.x_test, cfg,
+                      plan=default_plan(cfg.cascade, schedule="index"))
+    bd, _ = brute_force(idx, ds.x_test, w, k=k)
+    np.testing.assert_array_equal(np.array(res_b.dists), np.array(bd))
+    np.testing.assert_array_equal(np.array(res_b.dists), np.array(res_i.dists))
+    np.testing.assert_array_equal(np.array(res_b.idx), np.array(res_i.idx))
+    assert np.all(np.array(res_b.n_dtw) <= np.array(res_i.n_dtw))
+
+
+def test_bound_schedule_with_exclude():
+    ds, idx, cfg = _setup(k=2)
+    q = ds.x_train[:6]
+    ex = jnp.arange(6)
+    res_b = nn_search(idx, q, cfg, exclude=ex,
+                      plan=default_plan(cfg.cascade, schedule="bound"))
+    res_i = nn_search(idx, q, cfg, exclude=ex,
+                      plan=default_plan(cfg.cascade, schedule="index"))
+    bd, _ = brute_force(idx, q, 8, k=2, exclude=ex)
+    np.testing.assert_array_equal(np.array(res_b.dists), np.array(bd))
+    np.testing.assert_array_equal(np.array(res_b.n_dtw), np.array(res_i.n_dtw))
+    assert np.all(np.array(res_b.idx[:, 0]) != np.arange(6))
+
+
+def test_default_plan_is_bound_scheduled():
+    cfg = CascadeConfig(w=8)
+    plan = default_plan(cfg)
+    assert plan.schedule == "bound"
+    assert [t.name for t in plan.tiers] == ["kim", "bands",
+                                            "enhanced_pairwise"]
+    assert [t.cost for t in plan.tiers] == ["O(1)", "O(V^2)", "O(L)"]
+    # tier names round-trip through the registry
+    for t in plan.tiers:
+        assert get_tier(t.name).name == t.name
+
+
+# ---------------------------------------------------------------------------
+# the pair-packing permutation is a semantic no-op on the DTW ops
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("P,L,w", [(9, 33, 8), (16, 21, 5), (130, 17, 4)])
+def test_dtw_perm_gather_is_noop(rng, P, L, w):
+    a = jnp.array(rng.normal(size=(P, L)).astype(np.float32))
+    b = jnp.array(rng.normal(size=(P, L)).astype(np.float32))
+    plain = np.array(ref.dtw_band_ref(a, b, w))
+    cut = jnp.array(np.where(np.arange(P) % 3 == 0,
+                             plain * 0.5,
+                             plain * 2.0 + 1.0).astype(np.float32))
+    perm = jnp.array(rng.permutation(P))
+    for fn in (ops.dtw_band_op, ref.dtw_band_ref):
+        base = np.array(fn(a, b, w, cut))
+        got = np.array(fn(a, b, w, cut, perm=perm))
+        np.testing.assert_array_equal(got, base)
+        # no cutoff: permutation of a cutoff-free batch
+        np.testing.assert_array_equal(
+            np.array(fn(a, b, w, perm=perm)), np.array(fn(a, b, w)),
+        )
+        # scalar cutoffs stay legal under perm (broadcast before gather)
+        scal = float(plain.max() * 2 + 1)
+        np.testing.assert_array_equal(
+            np.array(fn(a, b, w, scal, perm=perm)),
+            np.array(fn(a, b, w, scal)),
+        )
+
+
+# ---------------------------------------------------------------------------
+# declarative plans: registration, reordering, custom tiers
+# ---------------------------------------------------------------------------
+
+def test_register_custom_tier_keeps_engine_exact():
+    """The pipeline.py worked example: a second bands pass at V=2 slots in
+    front of the V=4 tier as pure plan data, engine exactness untouched."""
+
+    @register_tier("bands_v2_test")
+    def bands_v2_tier() -> BoundTier:
+        def fn(q, index, cfg):
+            return bands_prefilter(q, index, dataclasses.replace(cfg, v=2))
+        return BoundTier("bands_v2", cost="O(V^2)", scope="all_pairs", fn=fn)
+
+    assert "bands_v2_test" in pl.registered_tiers()
+    ds, idx, cfg = _setup(k=2)
+    plan = default_plan(cfg.cascade)
+    plan = dataclasses.replace(
+        plan,
+        tiers=(plan.tiers[0], get_tier("bands_v2_test"), *plan.tiers[1:]),
+    )
+    res = nn_search(idx, ds.x_test, cfg, plan=plan)
+    bd, _ = brute_force(idx, ds.x_test, 8, k=2)
+    np.testing.assert_array_equal(np.array(res.dists), np.array(bd))
+
+
+def test_reordering_all_pairs_tiers_is_result_invariant():
+    """Running max is commutative: kim->bands == bands->kim."""
+    ds, idx, cfg = _setup()
+    plan = default_plan(cfg.cascade)
+    swapped = dataclasses.replace(
+        plan, tiers=(plan.tiers[1], plan.tiers[0], plan.tiers[2])
+    )
+    q = jnp.asarray(ds.x_test)
+    a = run_plan(q, idx, cfg.cascade, plan, k=1)
+    b = run_plan(q, idx, cfg.cascade, swapped, k=1)
+    np.testing.assert_array_equal(np.array(a.lb), np.array(b.lb))
+
+
+def test_plan_validation():
+    kim, bands, enh = (get_tier("kim"), get_tier("bands"),
+                       get_tier("enhanced_pairwise"))
+    with pytest.raises(ValueError, match="compaction point"):
+        VerificationPlan(tiers=(kim, enh, bands))
+    with pytest.raises(ValueError, match="schedule"):
+        VerificationPlan(tiers=(kim, enh), schedule="random")
+    with pytest.raises(ValueError, match="scope"):
+        BoundTier("x", cost="O(1)", scope="rowwise", fn=lambda *a: None)
+    with pytest.raises(KeyError, match="unknown tier"):
+        get_tier("no_such_tier")
+    # dense bounds have no compaction: pairwise tiers are rejected loudly
+    # instead of silently dropped
+    from repro.search import compute_bounds
+    ds, idx, cfg = _setup()
+    dense_cfg = dataclasses.replace(cfg.cascade, staged=False)
+    with pytest.raises(ValueError, match="pairwise tiers"):
+        compute_bounds(jnp.asarray(ds.x_test), idx, dense_cfg,
+                       plan=VerificationPlan(tiers=(kim, enh)))
+
+
+def test_unknown_schedule_vs_tiers_smoke():
+    """A plan with no pairwise tier still seeds and stays exact (cheap
+    tiers only — compaction is skipped entirely)."""
+    ds, idx, cfg = _setup(k=2)
+    plan = VerificationPlan(tiers=(get_tier("kim"), get_tier("bands")))
+    res = nn_search(idx, ds.x_test, cfg, plan=plan)
+    bd, _ = brute_force(idx, ds.x_test, 8, k=2)
+    np.testing.assert_array_equal(np.array(res.dists), np.array(bd))
+
+
+# ---------------------------------------------------------------------------
+# compaction limit policy (the global-budget hook)
+# ---------------------------------------------------------------------------
+
+def test_limit_fn_trades_tightness_never_exactness():
+    from repro.core import dtw_pairs
+
+    ds, idx, cfg0 = _setup(k=2)
+    q = jnp.asarray(ds.x_test)
+    for lim in (1, 3, 1000):
+        plan = dataclasses.replace(
+            default_plan(cfg0.cascade),
+            compaction=Compaction(
+                budget=8,
+                limit_fn=lambda lb01, B, k, _l=lim: jnp.full(
+                    (lb01.shape[0],), _l, jnp.int32),
+            ),
+        )
+        res = nn_search(idx, ds.x_test, cfg0, plan=plan)
+        bd, _ = brute_force(idx, ds.x_test, 8, k=2)
+        np.testing.assert_array_equal(np.array(res.dists), np.array(bd))
+        # bounds stay valid lower bounds whatever the allocation
+        dm = np.array(dtw_pairs(q, idx.series, cfg0.cascade.w))
+        assert np.all(np.array(res.lb) <= dm * (1 + 1e-4) + 1e-4)
+
+
+# ---------------------------------------------------------------------------
+# adaptive-budget memo keys on (index, k, w)
+# ---------------------------------------------------------------------------
+
+def test_budget_memo_keys_on_index_k_w(monkeypatch):
+    """A bucket estimated for k=1 must not be reused for k=3 (tau grows
+    with k), nor across windows or stores."""
+    calls = []
+    from repro.search import cascade as casc
+
+    orig = casc.choose_survivor_budget
+
+    def counting(q, index, cfg, k=1, **kw):
+        calls.append((id(index.series), cfg.w, k))
+        return orig(q, index, cfg, k, **kw)
+
+    monkeypatch.setattr(casc, "choose_survivor_budget", counting)
+    pl.budget_cache_clear()
+
+    ds, idx, _ = _setup(w=8)
+    for k in (1, 3):
+        cfg = EngineConfig(cascade=CascadeConfig(w=8), verify_chunk=4, k=k)
+        nn_search(idx, ds.x_test, cfg)
+        nn_search(idx, ds.x_test, cfg)          # second call: memo hit
+    assert [c[2] for c in calls] == [1, 3]      # one estimate per k
+    assert pl.budget_cache_len() == 2
+
+    # a different window re-estimates on the same store
+    idx12 = build_index(ds.x_train, 12, ds.y_train)
+    cfg12 = EngineConfig(cascade=CascadeConfig(w=12), verify_chunk=4, k=1)
+    nn_search(idx12, ds.x_test, cfg12)
+    assert calls[-1][1] == 12 and len(calls) == 3
+    pl.budget_cache_clear()
