@@ -29,18 +29,36 @@ PR 2 rows (the survivor hot path):
 PR 3 rows (scheduler observability — bound-ordered verification):
   * ``sched_{bound,index}_L*_w*_tile_skip_rate`` — fraction of the DTW
     kernel's (pair_tile, row_block) grid cells skipped on a verification
-    round's flat batch when it is packed in ascending-bound order
-    (``bound``, the engine default) vs the PR 2 stripe order (``index``).
-    Computed with the host-side liveness mirror
-    (core.dtw.dtw_band_death_blocks) at the kernel's real tile size and
-    row-block policy; the uplift is what converts the per-tile liveness
-    exit into an effective per-pair early exit, and should surface in the
-    ``dtw_band_ee_*_speedup_vs_pr1`` trajectory on real hardware.
+    round's flat batch under each schedule, computed with the host-side
+    liveness mirror (core.dtw.dtw_band_death_blocks) at the *engine's
+    real geometry per schedule*: bound-ordered rounds now also shrink
+    their pair tile (``tiling.sched_pair_tile`` — PR 4), index rounds
+    keep the kernel default.  The uplift is what converts the per-tile
+    liveness exit into an effective per-pair early exit, and should
+    surface in the ``dtw_band_ee_*_speedup_vs_pr1`` trajectory on real
+    hardware.
   * ``sched_{bound,index}_L*_w*_n_dtw`` — total engine verifications under
     each schedule on the same workload.  The schedule is a packing
     permutation only, so these two must stay equal (the property tests
     enforce per-query equality; the bench records the totals so the
     trajectory proves it too).
+
+PR 4 rows (streaming DTW + per-round tile sizing):
+  * ``dtw_band_stream_L{2048,8192,32768,65536}_w*_{nocut,cut}`` — the
+    HBM-resident streaming DMA pipeline across the old ``_DTW_MAX_L``
+    ceiling (16384): per-call time without a cutoff and with an
+    aggressive one (every lane abandons in the first row blocks, so the
+    ``cut`` rows measure skipped sweeps *and* skipped DMA issue).
+    ``*_cut_speedup_vs_nocut`` are the derived cutoff speedups.
+  * ``dtw_band_stream_L2048_w205_speedup_vs_resident`` — streaming vs the
+    VMEM-resident grid at a length residency handles fine: the no-
+    regression guard for the DMA pipeline (>= ~0.9 means the pipeline
+    costs < 10% where residency was already enough).
+  * ``sched_bound_L*_w*_tile128_skip_rate`` — the bound schedule at the
+    PR 3 fixed 128-lane tile, kept so the packing-only uplift and the
+    tile-sizing uplift stay separable in the trajectory;
+    ``sched_bound_L*_w*_round_tile_p`` records the tile the per-round
+    policy actually picked.
 """
 
 from __future__ import annotations
@@ -78,6 +96,75 @@ _SCHED_Q = 16
 _SCHED_M = 32                      # verify_chunk -> P = Q*M = 512 flat slots
 _SCHED_W_FRACTIONS = (0.1, 0.3)
 
+# streaming DTW: lengths across the old _DTW_MAX_L = 16384 ceiling; small
+# P + modest w keep the interpret-mode sweeps CI-affordable (time is the
+# anti-diagonal count — the pipeline itself is length-independent VMEM)
+_STREAM_P = 4
+_STREAM_SHAPES = ((2048, 205), (8192, 64), (32768, 64), (65536, 64))
+
+
+def _stream_records() -> list[dict]:
+    """Streaming vs resident dtw_band rows (see module docstring)."""
+    from repro.kernels.dtw_band import dtw_band_pallas
+
+    recs = []
+    for L, w in _STREAM_SHAPES:
+        a, b = random_pairs(_STREAM_P, L, seed=6)
+        aj, bj = jnp.asarray(a), jnp.asarray(b)
+        # the short L=2048 calls carry the stream-vs-resident ratio — give
+        # them enough repeats that the ratio is signal, not scheduler noise
+        reps = 9 if L <= 2048 else 3
+        sec_no = time_fn(
+            lambda x, y, _w=w: dtw_band_pallas(x, y, _w, stream=True,
+                                               interpret=True),
+            aj, bj, repeats=reps,
+        )
+        recs.append(dict(
+            name=f"dtw_band_stream_L{L}_w{w}_nocut",
+            us_per_call=1e6 * sec_no / _STREAM_P,
+            derived=f"flops_per_pair={10 * L * min(2 * w + 1, L)}",
+        ))
+        d_true = dtw_band_pallas(aj, bj, w, stream=True, interpret=True)
+        # aggressive cutoff: every lane abandons early, so the cut row
+        # measures genuinely skipped sweeps and skipped DMA issue
+        cutv = jnp.asarray(d_true) * 0.01
+        sec_cut = time_fn(
+            lambda x, y, _w=w, _c=cutv: dtw_band_pallas(
+                x, y, _w, _c, stream=True, interpret=True),
+            aj, bj, repeats=reps,
+        )
+        recs.append(dict(
+            name=f"dtw_band_stream_L{L}_w{w}_cut",
+            us_per_call=1e6 * sec_cut / _STREAM_P,
+            derived="poisoned tiles skip remaining blocks and DMA issue",
+        ))
+        recs.append(dict(
+            name=f"dtw_band_stream_L{L}_w{w}_cut_speedup_vs_nocut",
+            us_per_call=sec_no / sec_cut,
+            derived="ratio: full streaming sweep / early-abandoned sweep",
+        ))
+        if L <= 2048:
+            # residency handles this length fine: the DMA pipeline must
+            # not cost more than ~10% here (the no-regression guard)
+            sec_res = time_fn(
+                lambda x, y, _w=w: dtw_band_pallas(x, y, _w,
+                                                   interpret=True),
+                aj, bj, repeats=reps,
+            )
+            recs.append(dict(
+                name=f"dtw_band_resident_L{L}_w{w}_nocut",
+                us_per_call=1e6 * sec_res / _STREAM_P,
+                derived="VMEM-resident early-exit grid at the same shape",
+            ))
+            recs.append(dict(
+                name=f"dtw_band_stream_L{L}_w{w}_speedup_vs_resident",
+                us_per_call=sec_res / sec_no,
+                derived="ratio: resident grid / streaming pipeline "
+                        "(>= ~0.9 = pipeline costs < 10% where residency "
+                        "was already enough)",
+            ))
+    return recs
+
 
 def _sched_records() -> list[dict]:
     """Tile-skip-rate + n_dtw rows for bound-ordered vs stripe packing.
@@ -102,7 +189,12 @@ def _sched_records() -> list[dict]:
     )
     from repro.data import make_dataset
     from repro.kernels.dtw_band import _VMEM_BUDGET
-    from repro.kernels.tiling import pick_pair_tile, round_up
+    from repro.kernels.tiling import (
+        Wb_pad,
+        pick_pair_tile,
+        round_up,
+        sched_pair_tile,
+    )
     from repro.search import (
         CascadeConfig,
         EngineConfig,
@@ -139,18 +231,22 @@ def _sched_records() -> list[dict]:
         slb = jnp.take_along_axis(lb_order, order, axis=1)
         P = Q * M
         N = idx.n
-        # kernel geometry: real tile size + row-block policy for this shape
+        # kernel geometry per schedule: index rounds keep the kernel
+        # default tile; bound rounds use the engine's per-round policy
+        # (sched_pair_tile) — the PR 3 fixed-128 packing is kept as the
+        # tile128 diagnostic so the two uplifts stay separable
         wb = min(w, L - 1)
-        Wb = round_up(2 * wb + 1, 128)
+        Wb = Wb_pad(wb)
         pad_len = round_up(2 * L + Wb + wb, 128)
-        tile = pick_pair_tile(128, P, (2 * pad_len + 8 * Wb) * 4,
-                              _VMEM_BUDGET)
+        per_row = (2 * pad_len + 8 * Wb) * 4
+        tile_i = pick_pair_tile(128, P, per_row, _VMEM_BUDGET)
+        tile_b = pick_pair_tile(sched_pair_tile(P), P, per_row, _VMEM_BUDGET)
         R = row_block_policy(L)
         n_blocks = -(-(2 * L - 1) // R)
         qi = jnp.arange(P) % Q
         stripe = jnp.arange(P) // Q
-        skipped = {"bound": 0.0, "index": 0.0}
-        cells = 0
+        skipped = {"bound": 0.0, "index": 0.0, "bound128": 0.0}
+        cells = {"bound": 0, "index": 0, "bound128": 0}
         for rnd in range(-(-N // M)):
             rank = jnp.minimum(rnd * M + stripe, N - 1)
             cidx = order[qi, rank]
@@ -160,29 +256,47 @@ def _sched_records() -> list[dict]:
             )
             valid = jnp.isfinite(lbv)
             qrows, crows = q[qi], idx.series[cidx]
-            nt = -(-P // tile)
             # index schedule: stripe packing, live cutoff everywhere (PR 2)
             death = dtw_band_death_blocks(qrows, crows, w, kth[qi])
-            skipped["index"] += tile_skip_rate(death, n_blocks, tile) * nt
+            nt = -(-P // tile_i)
+            skipped["index"] += tile_skip_rate(death, n_blocks, tile_i) * nt
+            cells["index"] += nt
             # bound schedule: ascending-bound packing, invalid slots poisoned
             perm = jnp.argsort(lbv)
             cut = jnp.where(valid, kth[qi], -jnp.inf)
             death = dtw_band_death_blocks(qrows[perm], crows[perm], w,
                                           cut[perm])
-            skipped["bound"] += tile_skip_rate(death, n_blocks, tile) * nt
-            cells += nt
+            nt = -(-P // tile_b)
+            skipped["bound"] += tile_skip_rate(death, n_blocks, tile_b) * nt
+            cells["bound"] += nt
+            nt = -(-P // tile_i)
+            skipped["bound128"] += (
+                tile_skip_rate(death, n_blocks, tile_i) * nt)
+            cells["bound128"] += nt
             # thread the k-th best forward (cutoff +infs cannot improve it)
             dd = ref.dtw_band_ref(qrows, crows, w, kth[qi])
             dd = jnp.where(valid, dd, jnp.inf)
             kth = jnp.minimum(kth, jnp.full((Q,), jnp.inf).at[qi].min(dd))
-        for sched in ("bound", "index"):
+        for sched, tile in (("bound", tile_b), ("index", tile_i)):
             recs.append(dict(
                 name=f"sched_{sched}_L{L}_w{w}_tile_skip_rate",
-                us_per_call=skipped[sched] / cells,
+                us_per_call=skipped[sched] / cells[sched],
                 derived=(f"skipped fraction of ({tile} pair-tile x "
                          f"{n_blocks} row-block) grid over the whole "
                          f"verification stream, P={P} per round"),
             ))
+        recs.append(dict(
+            name=f"sched_bound_L{L}_w{w}_tile128_skip_rate",
+            us_per_call=skipped["bound128"] / cells["bound128"],
+            derived=(f"bound packing at the PR 3 fixed {tile_i}-lane tile "
+                     "(packing-only uplift, for the trajectory)"),
+        ))
+        recs.append(dict(
+            name=f"sched_bound_L{L}_w{w}_round_tile_p",
+            us_per_call=float(tile_b),
+            derived="pair tile picked by tiling.sched_pair_tile for "
+                    f"P={P} bound-ordered rounds",
+        ))
     return recs
 
 
@@ -243,7 +357,9 @@ def kernel_records() -> list[dict]:
     jit_pairwise_ref = jax.jit(
         lambda a, b, e1, e2: ref.lb_enhanced_pairwise_ref(a, b, e1, e2, wp, vp)
     )
-    sec_jnp = time_fn(jit_pairwise_ref, qpj, cpj, up, lop)
+    # sub-ms calls: the jnp/pallas ratio is the satellite metric, so give
+    # it enough repeats that the median is signal
+    sec_jnp = time_fn(jit_pairwise_ref, qpj, cpj, up, lop, repeats=25)
     recs.append(dict(
         name=f"lb_enhanced_pairwise_jnp_{Pp}x{Lp}",
         us_per_call=1e6 * sec_jnp / Pp,
@@ -251,7 +367,7 @@ def kernel_records() -> list[dict]:
     ))
     sec_pal = time_fn(
         lambda a, b, e1, e2: lb_enhanced_pairwise_op(a, b, e1, e2, wp, vp),
-        qpj, cpj, up, lop,
+        qpj, cpj, up, lop, repeats=25,
     )
     recs.append(dict(
         name=f"lb_enhanced_pairwise_pallas_{Pp}x{Lp}",
@@ -295,6 +411,9 @@ def kernel_records() -> list[dict]:
                 us_per_call=times[("pr1", ctag)] / times[("ee", ctag)],
                 derived="ratio: PR1 lane-poisoning sweep / row-block early exit",
             ))
+
+    # --- streaming DMA pipeline across the old length ceiling -------------
+    recs.extend(_stream_records())
 
     # --- scheduler observability: bound-ordered vs stripe packing ---------
     recs.extend(_sched_records())

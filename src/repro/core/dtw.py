@@ -127,7 +127,8 @@ def row_block_policy(L: int) -> int:
     return min(D, max(64, -(-(D // 8) // 64) * 64))
 
 
-def band_step(d, carry, a2p, b2p, kk, *, L: int, w: int):
+def band_step(d, carry, a2p, b2p, kk, *, L: int, w: int,
+              a_off=0, b_off=0):
     """One anti-diagonal of the band-packed recurrence (no abandon test).
 
     ``carry = (S_{d-1}, S_{d-2})`` as ``(P, Wb)`` blocks; returns
@@ -136,12 +137,19 @@ def band_step(d, carry, a2p, b2p, kk, *, L: int, w: int):
     what keeps kernel and oracle bit-comparable by construction.  ``kk`` is
     the per-lane diagonal-offset iota; lanes beyond ``2w`` (the kernel's
     128-multiple padding) are masked invalid.
+
+    ``a_off``/``b_off`` declare that ``a2p``/``b2p`` are *windows* of the
+    packed operands starting at those global columns (the streaming
+    kernel's double-buffered per-row-block windows); the resident callers
+    pass whole operands and leave the defaults at 0.  The arithmetic on
+    the window is identical — only the slice origin moves — so windowed
+    and resident sweeps stay bit-comparable by construction too.
     """
     d1, d2 = carry
     tp, Wb = d1.shape
     dt = d1.dtype
-    a_at = lax.dynamic_slice(a2p, (0, d), (tp, Wb))      # a[(d + k - w)//2]
-    b_at = lax.dynamic_slice(b2p, (0, 2 * L - 1 - d), (tp, Wb))
+    a_at = lax.dynamic_slice(a2p, (0, d - a_off), (tp, Wb))  # a[(d+k-w)//2]
+    b_at = lax.dynamic_slice(b2p, (0, 2 * L - 1 - d - b_off), (tp, Wb))
     diff = a_at - b_at
     cost = diff * diff
     inf_col = jnp.full((tp, 1), _INF, dt)

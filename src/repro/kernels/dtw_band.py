@@ -57,13 +57,41 @@ per-step lane poisoning — the baseline the benchmark trajectory
 (BENCH_kernels.json ``dtw_band_pr1_*`` rows) measures the early-exit grid
 against.
 
-VMEM budget (per grid step): packed operands a2p + b2p are
-``2 * TP * pad_len`` f32 with ``pad_len ~= 2L + Wb``, plus 2 frontier
-buffers (scratch for the blocked grid) and ~4 temporaries of ``TP * Wb`` —
-``(4L + ~8Wb) * TP * 4`` bytes.  TP=128, L=2048, w=205 (0.1L, Wb=512):
-~6.2 MB.  ``tile_p`` auto-shrinks (multiples of 8) to keep long series
-inside ``_VMEM_BUDGET``, which is what lets ``_DTW_MAX_L`` in ops.py sit at
-16384 (L=16384, small w -> TP=32, ~8.6 MB).
+Streaming grid (``stream=True``): the resident grid above keeps the whole
+packed operands ``a2p``/``b2p`` (``~2 * TP * (2L + Wb)`` f32) in VMEM for
+the entire sweep, which is what used to cap ``dtw_band_op`` at
+``_DTW_MAX_L = 16384``.  The streaming kernel removes the length ceiling
+by leaving the operands in HBM (``pltpu.ANY`` memory space) and turning
+the row-block grid into a true DMA pipeline: row block ``j`` only ever
+touches the operand windows ``a2p[:, jR : jR + R + Wb)`` and
+``b2p[:, 2L - min(D, (j+1)R) : ... + R + Wb)``, so each ``(pair_tile,
+row_block)`` step double-buffers those windows — block ``j + 1``'s async
+copies are issued *before* block ``j``'s sweep and waited at the top of
+step ``j + 1``, overlapping DMA with compute everywhere except the
+warm-up block.  The DP frontier is carried in VMEM scratch exactly as in
+the resident grid, and the sweep runs the same ``band_step`` recurrence
+(with the window origins passed as ``a_off``/``b_off``), so streaming,
+resident, and the jnp ``dtw_band_blocked`` reference stay bit-comparable
+by construction.  Two SMEM flags steer the pipeline: ``live`` (as in the
+resident grid) and ``pending`` (a DMA pair is in flight for the current
+block).  A fully-poisoned tile stops *issuing* DMAs as well as computing:
+the step that kills the tile has already issued block ``j + 1``'s copies,
+so the next step drains them (keeping semaphores balanced) and every
+block after that is a pure no-op until the final block emits the +inf
+outputs.
+
+DMA-pipeline budget (per grid step — this is the whole point: the
+working set no longer contains ``L``): 2 double-buffer slots x 2 operand
+windows of ``Wwin = R + Wb`` lanes, plus the 2-buffer frontier and ~4
+``band_step`` temporaries of ``Wb`` lanes — ``(4 Wwin + ~8 Wb) * TP * 4``
+bytes, independent of series length.  ``tiling.stream_geometry`` picks
+the largest ``(tile_p, R)`` that fits ``_VMEM_BUDGET`` (preferring the
+shared ``row_block_policy`` block so abandon boundaries match the
+reference, halving ``R`` in 64-step multiples when the window is too
+wide); only when the band state itself (``~8 Wb`` lanes at the 8-sublane
+floor) exceeds the budget — e.g. ``w = L`` at ``L = 64k`` — does ops.py
+fall back to the jnp reference.  L=65536, w=0.01L (Wb=1408): policy picks
+TP=24, R=16384 — ~7.9 MB, where the resident layout would need ~550 MB.
 """
 
 from __future__ import annotations
@@ -77,7 +105,12 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.dtw import band_step, row_block_policy
-from repro.kernels.tiling import pick_pair_tile, round_up
+from repro.kernels.tiling import (
+    Wb_pad,
+    pick_pair_tile,
+    round_up,
+    stream_geometry,
+)
 
 Array = jax.Array
 
@@ -158,9 +191,134 @@ def _dtw_band_kernel_blocked(a2p_ref, b2p_ref, cut_ref, out_ref,
         out_ref[...] = s1_ref[...][:, w]
 
 
+def _dtw_band_kernel_stream(a2p_ref, b2p_ref, cut_ref, out_ref,
+                            abuf, bbuf, s1_ref, s2_ref, flags_ref,
+                            asem, bsem, *, L: int, w: int, Wb: int, R: int,
+                            Wwin: int, TP: int):
+    """Streaming row-block grid step: HBM-resident operands, double-
+    buffered per-block windows, DMA overlapped with the previous block's
+    sweep.
+
+    ``flags_ref[0]`` is the liveness flag (as in the resident grid);
+    ``flags_ref[1]`` records that a DMA pair for the *current* block is
+    in flight, so the one copy issued before the tile died still gets
+    drained and the semaphores stay balanced.
+    """
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    n_blocks = pl.num_programs(1)
+    D = 2 * L - 1
+
+    def window_dmas(blk, slot):
+        # block `blk` sweeps d in [blk*R, min(D, (blk+1)*R)): band_step
+        # slices a2p at d and b2p at 2L-1-d, so its operand windows are
+        # Wwin = R + Wb lanes starting at these offsets
+        aoff = blk * R
+        boff = 2 * L - jnp.minimum(D, (blk + 1) * R)
+        rows = pl.ds(i * TP, TP)
+        da = pltpu.make_async_copy(
+            a2p_ref.at[rows, pl.ds(aoff, Wwin)], abuf.at[slot],
+            asem.at[slot])
+        db = pltpu.make_async_copy(
+            b2p_ref.at[rows, pl.ds(boff, Wwin)], bbuf.at[slot],
+            bsem.at[slot])
+        return da, db
+
+    @pl.when(j == 0)
+    def _reset():
+        s1_ref[...] = jnp.full(s1_ref.shape, _INF, s1_ref.dtype)
+        s2_ref[...] = jnp.full(s2_ref.shape, _INF, s2_ref.dtype)
+        flags_ref[0] = 1
+        da, db = window_dmas(0, 0)        # warm-up block: no overlap
+        da.start()
+        db.start()
+        flags_ref[1] = 1
+
+    @pl.when(flags_ref[1] == 1)
+    def _arrive():
+        # wait for the current block's windows (issued at step j-1, or by
+        # the warm-up above); runs even when the tile is already dead so
+        # the last issued copy is always drained exactly once
+        slot = lax.rem(j, 2)
+        da, db = window_dmas(j, slot)
+        da.wait()
+        db.wait()
+        flags_ref[1] = 0
+
+    @pl.when(flags_ref[0] == 1)
+    def _sweep():
+        slot = lax.rem(j, 2)
+
+        @pl.when(j + 1 < n_blocks)
+        def _prefetch():
+            # issue block j+1's windows before this block's sweep so the
+            # copies fly while we compute; dead tiles never reach here,
+            # which is what turns the liveness exit into skipped DMA too
+            da, db = window_dmas(j + 1, lax.rem(j + 1, 2))
+            da.start()
+            db.start()
+            flags_ref[1] = 1
+
+        a2w = abuf[slot]                                 # (TP, Wwin)
+        b2w = bbuf[slot]
+        cut = cut_ref[...][:, None]                      # (TP, 1)
+        kk = lax.broadcasted_iota(jnp.int32, (TP, Wb), 1)
+        d0 = j * R
+        boff = 2 * L - jnp.minimum(D, (j + 1) * R)
+        n_steps = jnp.minimum(R, D - d0)                 # last block is short
+
+        def step(t, carry):
+            return band_step(d0 + t, carry, a2w, b2w, kk, L=L, w=w,
+                             a_off=d0, b_off=boff)
+
+        d1, d2 = lax.fori_loop(0, n_steps, step, (s1_ref[...], s2_ref[...]))
+        # block-boundary abandon: min(S_d, S_{d-1}) lower-bounds final DTW
+        fmin = jnp.min(jnp.minimum(d1, d2), axis=-1, keepdims=True)
+        dead = fmin > cut
+        s1_ref[...] = jnp.where(dead, _INF, d1)
+        s2_ref[...] = jnp.where(dead, _INF, d2)
+        flags_ref[0] = jnp.any(jnp.logical_not(dead)).astype(jnp.int32)
+
+    @pl.when(j == n_blocks - 1)
+    def _emit():
+        out_ref[...] = s1_ref[...][:, w]
+
+
+def _pack_band_operands(a: Array, b: Array, cutoff: Array | None, wb: int,
+                        pad_len: int, tile_p: int):
+    """Host-side band packing shared by the resident and streaming paths
+    (one definition — the two grids' bit-equality depends on identical
+    operand layout): pad the pair axis to the tile, build the
+    2x-duplicated shifted operands ``a2p[wb + t] = a[t//2]`` /
+    ``b2p[wb + t] = b[(2L-1-t)//2]``.  Pad lanes get a -inf cutoff so
+    they die at the first abandon check — a +inf cutoff would keep them
+    alive forever and pin the liveness flag up, disabling early exit for
+    the remainder tile.  Returns ``(a2p, b2p, cutoff, Pp)``.
+    """
+    P, L = a.shape
+    if cutoff is None:
+        cutoff = jnp.full((P,), _INF, a.dtype)
+    else:
+        cutoff = jnp.broadcast_to(jnp.asarray(cutoff, a.dtype), (P,))
+    pp = (-P) % tile_p
+    if pp:
+        a = jnp.pad(a, ((0, pp), (0, 0)))
+        b = jnp.pad(b, ((0, pp), (0, 0)))
+        cutoff = jnp.pad(cutoff, (0, pp), constant_values=-_INF)
+    Pp = P + pp
+    a2 = jnp.repeat(a, 2, axis=-1)
+    b2f = jnp.flip(jnp.repeat(b, 2, axis=-1), axis=-1)
+    zl = jnp.zeros((Pp, wb), a.dtype)
+    zr = jnp.zeros((Pp, pad_len - wb - 2 * L), a.dtype)
+    a2p = jnp.concatenate([zl, a2, zr], axis=-1)         # (Pp, pad_len)
+    b2p = jnp.concatenate([zl, b2f, zr], axis=-1)
+    return a2p, b2p, cutoff, Pp
+
+
 @functools.partial(
     jax.jit,
-    static_argnames=("w", "tile_p", "interpret", "early_exit", "row_block"),
+    static_argnames=("w", "tile_p", "interpret", "early_exit", "row_block",
+                     "stream"),
 )
 def dtw_band_pallas(
     a: Array,
@@ -172,6 +330,7 @@ def dtw_band_pallas(
     interpret: bool = False,
     early_exit: bool = True,
     row_block: int | None = None,
+    stream: bool = False,
 ) -> Array:
     """Pairwise banded DTW: ``(P, L), (P, L) -> (P,)`` squared-cost values.
 
@@ -184,36 +343,32 @@ def dtw_band_pallas(
     ``False`` runs PR 1's single-step grid with per-step lane poisoning
     (same results, no block skipping).  ``row_block`` overrides the
     ``row_block_policy(L)`` block size (testing/benchmarks).
+
+    ``stream`` runs the DMA-pipelined grid instead: operands stay in HBM
+    and each row block double-buffers its operand windows (module
+    docstring), so VMEM holds only the per-block working set and there is
+    no length ceiling.  Implies the early-exit liveness behaviour; the
+    caller (ops.dtw_band_op) picks this path automatically for series
+    beyond the resident budget.  Raises ``ValueError`` when even the
+    minimum streaming block cannot fit VMEM (band state wider than the
+    budget) — ops.py routes those shapes to the jnp reference instead.
     """
     P, L = a.shape
     if w is None or w >= L:
         w = L
     wb = min(w, L - 1)                 # |i - j| <= L - 1 always holds
-    Wb = round_up(2 * wb + 1, 128)
+    Wb = Wb_pad(wb)
+    if stream:
+        return _dtw_band_pallas_stream(
+            a, b, wb, cutoff, tile_p=tile_p, interpret=interpret,
+            row_block=row_block,
+        )
     pad_len = round_up(2 * L + Wb + wb, 128)
     # auto-shrink the pair tile so packed operands + state fit VMEM
     per_row = (2 * pad_len + 8 * Wb) * 4
     tile_p = pick_pair_tile(tile_p, P, per_row, _VMEM_BUDGET)
-    if cutoff is None:
-        cutoff = jnp.full((P,), _INF, a.dtype)
-    else:
-        cutoff = jnp.broadcast_to(jnp.asarray(cutoff, a.dtype), (P,))
-    pp = (-P) % tile_p
-    if pp:
-        a = jnp.pad(a, ((0, pp), (0, 0)))
-        b = jnp.pad(b, ((0, pp), (0, 0)))
-        # pad lanes get a -inf cutoff so they die at the first abandon
-        # check — a +inf cutoff would keep them alive forever and pin the
-        # liveness flag up, disabling early exit for the remainder tile
-        cutoff = jnp.pad(cutoff, (0, pp), constant_values=-_INF)
-    Pp = P + pp
-    # host-side band packing: a2p[wb + t] = a[t//2], b2p[wb + t] = b[(2L-1-t)//2]
-    a2 = jnp.repeat(a, 2, axis=-1)
-    b2f = jnp.flip(jnp.repeat(b, 2, axis=-1), axis=-1)
-    zl = jnp.zeros((Pp, wb), a.dtype)
-    zr = jnp.zeros((Pp, pad_len - wb - 2 * L), a.dtype)
-    a2p = jnp.concatenate([zl, a2, zr], axis=-1)         # (Pp, pad_len)
-    b2p = jnp.concatenate([zl, b2f, zr], axis=-1)
+    a2p, b2p, cutoff, Pp = _pack_band_operands(a, b, cutoff, wb, pad_len,
+                                               tile_p)
     if not early_exit:
         out = pl.pallas_call(
             functools.partial(_dtw_band_kernel, L=L, w=wb, Wb=Wb),
@@ -246,6 +401,66 @@ def dtw_band_pallas(
             pltpu.VMEM((tile_p, Wb), a.dtype),
             pltpu.VMEM((tile_p, Wb), a.dtype),
             pltpu.SMEM((1,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(a2p, b2p, cutoff)
+    return out[:P]
+
+
+def _dtw_band_pallas_stream(
+    a: Array,
+    b: Array,
+    wb: int,
+    cutoff: Array | None,
+    *,
+    tile_p: int,
+    interpret: bool,
+    row_block: int | None,
+) -> Array:
+    """Streaming path of ``dtw_band_pallas`` (already inside its jit)."""
+    P, L = a.shape
+    Wb = Wb_pad(wb)
+    D = 2 * L - 1
+    geom = stream_geometry(L, wb, tile_p, P, _VMEM_BUDGET,
+                           row_block=row_block)
+    if geom is None:
+        raise ValueError(
+            f"streaming dtw_band: band state (~8 x {Wb} lanes) exceeds the "
+            f"VMEM budget at the sublane floor (L={L}, w={wb}); use the "
+            "jnp reference for this shape (ops.dtw_band_op does)"
+        )
+    tile_p, R = geom
+    n_blocks = -(-D // R)
+    Wwin = round_up(R + Wb, 128)
+    # the host packing must cover every block window: block j reads
+    # a2p[:, jR : jR + Wwin) and b2p[:, 2L - min(D, (j+1)R) : ... + Wwin)
+    pad_len = round_up(
+        max(2 * L + Wb + wb, (n_blocks - 1) * R + Wwin,
+            2 * L - min(D, R) + Wwin),
+        128,
+    )
+    a2p, b2p, cutoff, Pp = _pack_band_operands(a, b, cutoff, wb, pad_len,
+                                               tile_p)
+    out = pl.pallas_call(
+        functools.partial(_dtw_band_kernel_stream, L=L, w=wb, Wb=Wb, R=R,
+                          Wwin=Wwin, TP=tile_p),
+        grid=(Pp // tile_p, n_blocks),
+        in_specs=[
+            # operands stay in HBM; the kernel DMAs its own windows
+            pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.ANY),
+            pl.BlockSpec(memory_space=pltpu.TPUMemorySpace.ANY),
+            pl.BlockSpec((tile_p,), lambda i, j: (i,)),
+        ],
+        out_specs=pl.BlockSpec((tile_p,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((Pp,), a.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((2, tile_p, Wwin), a.dtype),      # A2 window slots
+            pltpu.VMEM((2, tile_p, Wwin), a.dtype),      # B2 window slots
+            pltpu.VMEM((tile_p, Wb), a.dtype),           # frontier S_{d-1}
+            pltpu.VMEM((tile_p, Wb), a.dtype),           # frontier S_{d-2}
+            pltpu.SMEM((2,), jnp.int32),                 # live, pending
+            pltpu.SemaphoreType.DMA((2,)),
+            pltpu.SemaphoreType.DMA((2,)),
         ],
         interpret=interpret,
     )(a2p, b2p, cutoff)

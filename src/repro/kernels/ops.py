@@ -20,22 +20,24 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref
+from repro.kernels.dtw_band import _VMEM_BUDGET as _DTW_VMEM_BUDGET
 from repro.kernels.dtw_band import dtw_band_pallas
 from repro.kernels.envelope import envelope_pallas
 from repro.kernels.lb_enhanced import lb_enhanced_pallas
 from repro.kernels.lb_enhanced_pairwise import lb_enhanced_pairwise_pallas
 from repro.kernels.lb_keogh import lb_keogh_pallas
 from repro.kernels.mamba_scan import mamba_scan_pallas
-from repro.kernels.tiling import apply_pair_perm
+from repro.kernels.tiling import apply_pair_perm, stream_geometry
 
 Array = jax.Array
 
 # VMEM-derived shape limits (see per-kernel headers for the budgets)
 _ENVELOPE_MAX_L = 65536
 _LB_MAX_L = 16384
-# Band-packed layout: state is (TP, 2w+1) not (TP, L), and the pair tile
-# auto-shrinks, so the ceiling is 4x the seed kernel's 4096.
-_DTW_MAX_L = 16384
+# Above this length the packed DTW operands stop being VMEM-resident and
+# dtw_band_op switches to the streaming DMA-pipeline grid — there is no
+# length ceiling any more, only this residency crossover.
+_DTW_RESIDENT_MAX_L = 16384
 
 
 def _interpret() -> bool:
@@ -76,26 +78,33 @@ def lb_enhanced_op(
 
 def lb_enhanced_pairwise_op(
     q: Array, c: Array, u: Array, lo: Array, w: int, v: int,
-    *, bands_only: bool = False,
+    *, live: Array | None = None, bands_only: bool = False,
 ) -> Array:
     """``(P, L) x (P, L) -> (P,)`` pairwise LB_ENHANCED^V bounds.
 
     The staged cascade's tier-2 shape: gather-compacted (query, candidate)
     survivor pairs, one bound per packed row (see
     kernels/lb_enhanced_pairwise.py vs the cross-block lb_enhanced.py).
+
+    ``live`` (optional ``(P,)``) marks the slots the compaction policy
+    allocated for refinement: dead slots return ``-inf`` and fully-dead
+    pair tiles skip their compute — the global survivor budget's refine
+    limits become skipped work, not masked outputs.
     """
     if q.shape[-1] > _LB_MAX_L:
         return ref.lb_enhanced_pairwise_ref(
-            q, c, u, lo, w, v, bands_only=bands_only
+            q, c, u, lo, w, v, live=live, bands_only=bands_only
         )
     return lb_enhanced_pairwise_pallas(
-        q, c, u, lo, w, v, bands_only=bands_only, interpret=_interpret()
+        q, c, u, lo, w, v, live=live, bands_only=bands_only,
+        interpret=_interpret(),
     )
 
 
 def dtw_band_op(
     a: Array, b: Array, w: int | None = None, cutoff: Array | None = None,
     *, early_exit: bool = True, perm: Array | None = None,
+    tile_p: int | None = None,
 ) -> Array:
     """Pairwise banded DTW ``(P, L) x (P, L) -> (P,)``.
 
@@ -112,16 +121,42 @@ def dtw_band_op(
     which pairs share a pair tile — the engine's bound-ordered schedule
     clusters doomed pairs so the tile-level early exit fires per cluster —
     without the kernel, or the results, changing at all.
+
+    ``tile_p`` (optional) caps the pair-tile size — the scheduler hook
+    behind ``VerificationPlan.verify_tile_p``: bound-ordered rounds pick
+    smaller tiles so the liveness exit fires on cluster boundaries (see
+    tiling.sched_pair_tile).  ``None`` keeps the kernel default.  Packing
+    geometry only; results are invariant under it.
+
+    Length dispatch: series up to ``_DTW_RESIDENT_MAX_L`` run the
+    VMEM-resident grid; longer series run the streaming DMA pipeline
+    (operands in HBM, double-buffered per-block windows — no length
+    ceiling).  The streaming grid *is* the liveness grid, so past the
+    crossover ``early_exit=False`` is ignored — the PR 1 baseline is a
+    VMEM-resident kernel by construction and only exists below the
+    crossover (benchmark it there).  Only shapes whose *band state*
+    exceeds VMEM at the sublane floor (``stream_geometry`` returns None,
+    e.g. w = L at L = 64k) fall back to the jnp reference, so the public
+    API never fails on shape grounds.
     """
     if perm is not None:
         return apply_pair_perm(
-            lambda x, y, c: dtw_band_op(x, y, w, c, early_exit=early_exit),
+            lambda x, y, c: dtw_band_op(x, y, w, c, early_exit=early_exit,
+                                        tile_p=tile_p),
             perm, a, b, cutoff,
         )
-    if a.shape[-1] > _DTW_MAX_L:
-        return ref.dtw_band_ref(a, b, w, cutoff)
+    P, L = a.shape
+    tp = 128 if tile_p is None else tile_p
+    if L > _DTW_RESIDENT_MAX_L:
+        wb = min(L if (w is None or w >= L) else w, L - 1)
+        if stream_geometry(L, wb, tp, P, _DTW_VMEM_BUDGET) is None:
+            return ref.dtw_band_ref(a, b, w, cutoff)
+        return dtw_band_pallas(
+            a, b, w, cutoff, stream=True, tile_p=tp, interpret=_interpret()
+        )
     return dtw_band_pallas(
-        a, b, w, cutoff, early_exit=early_exit, interpret=_interpret()
+        a, b, w, cutoff, early_exit=early_exit, tile_p=tp,
+        interpret=_interpret(),
     )
 
 

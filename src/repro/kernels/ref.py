@@ -47,24 +47,35 @@ def lb_enhanced_ref(
 
 def lb_enhanced_pairwise_ref(
     q: Array, c: Array, u: Array, lo: Array, w: int, v: int,
-    *, bands_only: bool = False,
+    *, live: Array | None = None, bands_only: bool = False,
 ) -> Array:
     """Pairwise ``(P, L) x (P, L) -> (P,)`` LB_ENHANCED^V bounds.
 
     The packed survivor layout of the staged cascade's tier 2: row ``p``
     of the query batch pairs with row ``p`` of the candidate batch (the
     diagonal of the cross-block shape, never the full block).
+
+    ``live`` mirrors the kernel's per-slot liveness input: dead slots
+    return ``-inf`` (the caller's scatter-max identity).  The reference
+    computes everything and masks — the *semantics* of skipping, which is
+    all an oracle owes.
     """
     if bands_only:
         fn = jax.vmap(_lb.lb_enhanced_bands, (0, 0, None, None))
-        return fn(q, c, w, v)
-    fn = jax.vmap(_lb.lb_enhanced_env, (0, 0, 0, 0, None, None))
-    return fn(q, c, u, lo, w, v)
+        out = fn(q, c, w, v)
+    else:
+        fn = jax.vmap(_lb.lb_enhanced_env, (0, 0, 0, 0, None, None))
+        out = fn(q, c, u, lo, w, v)
+    if live is not None:
+        live = jnp.broadcast_to(jnp.asarray(live), out.shape).astype(bool)
+        out = jnp.where(live, out, -jnp.inf)
+    return out
 
 
 def dtw_band_ref(
     a: Array, b: Array, w: int | None = None, cutoff: Array | None = None,
     *, row_block: int | None = None, perm: Array | None = None,
+    tile_p: int | None = None,
 ) -> Array:
     """Pairwise banded DTW ``(P, L), (P, L) -> (P,)``.
 
@@ -79,7 +90,13 @@ def dtw_band_ref(
     compute, scatter back).  Lane results are independent of batch order,
     so it is a semantic no-op here too — accepted so the engine can thread
     one call shape through both the Pallas and the reference DTW paths.
+
+    ``tile_p`` mirrors the op's pair-tile cap the same way: tile size is
+    packing geometry with no per-lane effect, so the reference accepts
+    and ignores it — one call shape for the scheduler's per-round tile
+    hint on both dispatch paths.
     """
+    del tile_p                      # packing geometry only — no-op here
     if perm is not None:
         return _tiling.apply_pair_perm(
             lambda x, y, c: dtw_band_ref(x, y, w, c, row_block=row_block),

@@ -61,3 +61,84 @@ def pick_pair_tile(tile_p: int, P: int, per_row_bytes: int,
     batch is a single tile."""
     tile_p = min(tile_p, max(8, (budget_bytes // per_row_bytes) // 8 * 8))
     return min(tile_p, round_up(P, 8))
+
+
+def sched_pair_tile(P: int, default: int = 128) -> int:
+    """Pair-tile size for a *bound-ordered* verification round.
+
+    Under the engine's ascending-bound packing the doomed tail of a round
+    clusters into contiguous lanes, but the cluster boundary rarely lands
+    on a tile boundary — a tile exits only when *every* lane in it is
+    dead, so at the kernel's default 128-lane tiles one straggler holds
+    31 doomed neighbours hostage.  Smaller tiles localise the exit to the
+    cluster boundary at the cost of more grid steps; this policy scales
+    the tile with the round size so big rounds (absolute cluster sizes
+    grow with ``P``) keep wide tiles while typical engine rounds
+    (``P = Q * verify_chunk`` ~ a few hundred) drop to 32 lanes.  Unsorted
+    (``"index"``) rounds gain nothing from finer granularity and keep the
+    kernel default.  Tile size is packing geometry only — per-lane DTW
+    values, and therefore results and ``n_dtw``, are invariant under it.
+    """
+    return max(8, min(default, round_up(max(32, P // 16), 8)))
+
+
+# minimum streaming row block: one anti-diagonal sweep per DMA round trip
+# is all overhead, so the block never shrinks below 64 steps
+_STREAM_MIN_BLOCK = 64
+
+# preferred streaming block floor: each block pays a fixed pipeline cost
+# (DMA issue + warm-up latency), so short sweeps amortise better with
+# fewer, larger blocks than the resident grid's ~8-block policy — this is
+# what keeps the streaming path within ~10% of the resident grid at
+# lengths residency still handles (the bench's *_speedup_vs_resident key)
+_STREAM_PREF_BLOCK = 1024
+
+
+def stream_geometry(
+    L: int,
+    wb: int,
+    tile_p: int,
+    P: int,
+    budget_bytes: int,
+    row_block: int | None = None,
+) -> tuple[int, int] | None:
+    """Per-block working-set budget for the streaming DTW kernel.
+
+    The streaming kernel's VMEM footprint is *per row block*, not per
+    sweep: 2 double-buffer slots x 2 operand windows of ``Wwin = R + Wb``
+    lanes plus the frontier/temporary state of ``~8 Wb`` lanes, all times
+    the pair tile.  Returns ``(tile, R)`` — the largest pair tile (sublane
+    multiples, floor 8) and row block (64-step multiples) that fit
+    ``budget_bytes`` — or ``None`` when even the minimum block at the
+    sublane floor cannot fit (the band state itself exceeds VMEM; ops.py
+    falls back to the jnp reference there).
+
+    The default block is the shared ``row_block_policy`` (abandon
+    boundaries match the jnp reference) floored at ``_STREAM_PREF_BLOCK``
+    steps: short sweeps amortise the per-block pipeline cost (DMA issue +
+    warm-up) poorly, and moving an abandon boundary never changes values
+    (frontier minima are monotone — see core/dtw.py), only how soon a
+    dead tile stops.
+    """
+    from repro.core.dtw import row_block_policy
+
+    D = 2 * L - 1
+    R = row_block if row_block is not None else max(
+        row_block_policy(L), min(_STREAM_PREF_BLOCK, D))
+    R = max(1, min(R, D))
+    while True:
+        Wwin = round_up(R + Wb_pad(wb), 128)
+        per_row = (4 * Wwin + 8 * Wb_pad(wb)) * 4
+        tile = pick_pair_tile(tile_p, P, per_row, budget_bytes)
+        if tile * per_row <= budget_bytes:
+            return tile, R
+        if R <= _STREAM_MIN_BLOCK:
+            return None
+        R = max(_STREAM_MIN_BLOCK, round_up(R // 2, _STREAM_MIN_BLOCK))
+
+
+def Wb_pad(wb: int) -> int:
+    """Lane-padded band-state width ``2 wb + 1`` (128-lane multiples) —
+    one definition shared by the resident/streaming kernels and the
+    budget policies above."""
+    return round_up(2 * wb + 1, 128)

@@ -72,6 +72,7 @@ rule ``bucket(max(64, 4k, N/8))`` applies.
 from __future__ import annotations
 
 import dataclasses
+import inspect
 from typing import Callable
 
 import jax
@@ -203,6 +204,23 @@ def _chunked(
     """Map ``fn(start)`` over candidate chunks; concatenate on axis 1."""
     outs = [fn(s) for s in range(0, n, chunk)]
     return jnp.concatenate(outs, axis=1) if len(outs) > 1 else outs[0]
+
+
+def _accepts_live(fn) -> bool:
+    """Whether a pairwise tier fn takes the ``live`` slot-mask kwarg.
+
+    Custom tiers written to the pre-liveness contract (positional args
+    only) must keep working under a ``limit_fn`` compaction: they get the
+    maskless call and the executor's belt mask below handles their dead
+    slots instead.
+    """
+    try:
+        params = inspect.signature(fn).parameters
+    except (TypeError, ValueError):   # builtins/partials without signatures
+        return False
+    return "live" in params or any(
+        p.kind is inspect.Parameter.VAR_KEYWORD for p in params.values()
+    )
 
 
 def choose_survivor_budget(
@@ -394,15 +412,28 @@ def run_plan(
             crows = index.series[cidx]
             urows = index.upper[cidx]
             lrows = index.lower[cidx]
+            # per-slot liveness from this query's refine allocation: the
+            # packed layout keeps one query's slots contiguous, so light
+            # queries yield whole dead pair tiles and the tier kernels
+            # skip them outright (dead slots come back -inf — the
+            # identity of the scatter-max below, so unrefined slots keep
+            # their cheap tier-0/1 bound)
+            slot = jnp.arange(s, e)[None, :]
+            live = (
+                None if limit is None
+                else (slot < limit[:, None]).reshape(-1)     # (Q * bc,)
+            )
             pe = None
             for tier in pairwise_tiers:
-                t = tier.fn(qf, crows, urows, lrows, cfg)
+                if live is not None and _accepts_live(tier.fn):
+                    t = tier.fn(qf, crows, urows, lrows, cfg, live=live)
+                else:   # no limit, or a pre-liveness custom tier
+                    t = tier.fn(qf, crows, urows, lrows, cfg)
                 pe = t if pe is None else jnp.maximum(pe, t)
             block = pe.reshape(Q, e - s)
             if limit is not None:
-                # slots past this query's allocation keep their cheap
-                # bound: -inf is the identity of the scatter-max below
-                slot = jnp.arange(s, e)[None, :]
+                # belt for tiers without ``live`` support: the mask is
+                # idempotent over the kernel's own -inf dead slots
                 block = jnp.where(slot < limit[:, None], block, -_INF)
             cols.append(block)
         enh = jnp.concatenate(cols, axis=1) if len(cols) > 1 else cols[0]
@@ -420,7 +451,14 @@ def run_plan(
     _, seed_idx = lax.top_k(-seed_sel, k)            # (Q, k)
     qs = jnp.repeat(q, k, axis=0)                    # (Q*k, L)
     cs = index.series[seed_idx.reshape(-1)]
-    seed_d = dtw_fn(qs, cs, cfg.w).reshape(Q, k)
+    # seeds are the tightest-bound pairs — almost all live, so the
+    # per-round tile policy keeps full tiles here; an explicit plan
+    # verify_tile_p still overrides (pipeline.py)
+    if plan.verify_tile_p is not None:
+        seed_d = dtw_fn(qs, cs, cfg.w, tile_p=plan.verify_tile_p)
+    else:
+        seed_d = dtw_fn(qs, cs, cfg.w)
+    seed_d = seed_d.reshape(Q, k)
     # seed pairs are exactly verified: their distance is the perfect bound
     lb = lb.at[qarange[:, None], seed_idx].max(seed_d)
     return CascadeResult(lb=lb, seed_idx=seed_idx, seed_d=seed_d)

@@ -33,15 +33,18 @@ the mesh:
      ``lb_enhanced_pairwise`` layout unchanged — the allocation is a
      per-query *refine limit* over the packed slots, not a new shape.
 
-Shapes stay trace-static, so what moves across shards is bound
-*tightness*, not FLOPs: every shard still computes the ``2 * B`` packed
-width (masked slots keep their tier-0/1 bound — still a valid lower
-bound, so exactness of the merged result never depends on the policy;
-tested against single-device brute force on skewed shards).  The realised
-savings land downstream, where tighter bounds on the heavy shard mean
-fewer DTW verifications and earlier kernel abandons; teaching the
-pairwise kernel to skip masked slots outright (the same liveness
-mechanism the DTW tiles use) is the ROADMAP follow-up.
+Shapes stay trace-static — every shard's packed batch is the same
+``2 * B`` width — but the allocation is now *work*, not just tightness:
+the executor threads each query's refine limit into the pairwise tier as
+a per-slot ``live`` mask, and the kernel skips fully-dead pair tiles
+outright (the same SMEM-flag liveness mechanism the DTW tiles use — see
+kernels/lb_enhanced_pairwise.py), so a light shard's unallocated slots
+cost neither FLOPs nor bound tightness (they keep their tier-0/1 bound —
+still a valid lower bound, so exactness of the merged result never
+depends on the policy; tested against single-device brute force on
+skewed shards).  The remaining savings land downstream, where tighter
+bounds on the heavy shard mean fewer DTW verifications and earlier
+kernel abandons.
 
 The communication volume is O(Q * shards) scalars for the budget exchange
 plus O(Q * k * shards) floats for the top-k merge — independent of both N

@@ -53,7 +53,7 @@ from jax import lax
 
 from repro.kernels.ops import dtw_band_op
 from repro.kernels.ref import dtw_band_ref
-from repro.kernels.tiling import unpermute_pairs
+from repro.kernels.tiling import sched_pair_tile, unpermute_pairs
 from repro.search.cascade import (
     CascadeConfig,
     compute_bounds,
@@ -201,6 +201,15 @@ def nn_search(
     jarange = jnp.arange(P)
     max_rounds = -(-Q * N // P) + 2
     bound_sched = plan.schedule == "bound"
+    # per-round pair-tile sizing: bound-ordered rounds cluster their
+    # doomed tail, so a smaller tile lands the kernel's liveness exit on
+    # the cluster boundary (tiling.sched_pair_tile); the plan can pin an
+    # explicit size.  Unsorted rounds keep the kernel default — geometry
+    # only, results and n_dtw are invariant (see pipeline.py).
+    round_tile = (
+        plan.verify_tile_p if plan.verify_tile_p is not None
+        else sched_pair_tile(P)
+    ) if bound_sched else plan.verify_tile_p
 
     def body(state):
         r, best_d, best_i, n_dtw, cursor, done = state
@@ -234,10 +243,13 @@ def nn_search(
             # below sees the original slot order.
             perm = jnp.argsort(lbv)
             cut = jnp.where(valid, kth0[qi], -_INF)[perm]
-            dp = dtw_fn(q[qi[perm]], index.series[cidx[perm]], w, cut)
+            dp = dtw_fn(q[qi[perm]], index.series[cidx[perm]], w, cut,
+                        tile_p=round_tile)
             d = unpermute_pairs(perm, dp)                 # (P,) flat
         else:
-            d = dtw_fn(q[qi], index.series[cidx], w, kth0[qi])  # (P,)
+            # round_tile is None here unless the plan pinned verify_tile_p
+            d = dtw_fn(q[qi], index.series[cidx], w, kth0[qi],
+                       tile_p=round_tile)                 # (P,)
         d = jnp.where(valid, d, _INF)
         # per-query gather of this round's results (stripe layout)
         t = jnp.arange(T_max)

@@ -85,7 +85,11 @@ class BoundTier:
       scope: ``"all_pairs"`` (fn maps ``(q, index, cfg) -> (Q, N)`` bounds)
         or ``"pairwise"`` (fn maps packed rows
         ``(qrows, crows, urows, lrows, cfg) -> (P,)`` bounds over the
-        compacted survivors).
+        compacted survivors; when the plan's compaction carries a
+        ``limit_fn`` the executor also passes ``live=`` — a ``(P,)``
+        slot-liveness mask the tier should honour by returning ``-inf``
+        on dead slots, ideally skipping their work like the built-in
+        kernel does).
       fn: the bound function for that scope.  Must return a valid lower
         bound on ``DTW_w`` for every pair it scores.
     """
@@ -117,10 +121,12 @@ class Compaction:
       width_scale: with a ``limit_fn`` the *static* packed width is
         ``min(n, width_scale * B)`` so a skewed shard can be allocated more
         than the uniform per-shard budget while shapes stay trace-static.
-        Note the pairwise tiers compute the full packed width and the
-        limit masks results — under tracing the FLOPs are the width, so
-        ``limit_fn`` redistributes bound *tightness*, not tier work (see
-        search/distributed.py for why that is still the right trade).
+        The executor turns the per-query limits into a per-slot ``live``
+        mask for the pairwise tiers; the built-in kernel skips fully-dead
+        pair tiles outright (kernels/lb_enhanced_pairwise.py), so the
+        static width costs a light shard VMEM shape, not FLOPs — the
+        allocation moves real work between shards, not just tightness
+        (see search/distributed.py).
     """
 
     budget: int | None = None
@@ -145,11 +151,24 @@ class VerificationPlan:
         the same tiles, converting the per-tile liveness exit into an
         effective per-pair early exit;
       * ``"index"``: PR 2's unsorted stripe packing (bench baseline).
+
+    ``verify_tile_p`` makes the pair-tile size a scheduler decision: it is
+    threaded into every verification DTW dispatch (the engine's rounds and
+    ``run_plan``'s seed verification) as the kernel's ``tile_p`` cap.
+    ``None`` defers to the per-round policy — bound-ordered engine rounds
+    shrink the tile (``kernels.tiling.sched_pair_tile``) so the doomed
+    cluster's boundary lands on a tile boundary and the liveness exit
+    fires there, while seed verification and unsorted rounds keep the
+    kernel default (seeds are the tightest-bound pairs: almost all live,
+    nothing to exit, so full tiles win).  Tile size is packing geometry
+    only — results and per-query ``n_dtw`` are invariant under it
+    (property-tested like the schedule itself).
     """
 
     tiers: tuple[BoundTier, ...]
     compaction: Compaction = Compaction()
     schedule: str = "bound"
+    verify_tile_p: int | None = None
 
     def __post_init__(self):
         if self.schedule not in ("bound", "index"):
@@ -231,8 +250,9 @@ def _bands_tier() -> BoundTier:
 def _enhanced_pairwise_tier() -> BoundTier:
     """O(L)/pair fused LB_ENHANCED^V over the packed survivor rows."""
 
-    def fn(qrows, crows, urows, lrows, cfg):
-        return cfg.pairwise_fn()(qrows, crows, urows, lrows, cfg.w, cfg.v)
+    def fn(qrows, crows, urows, lrows, cfg, *, live=None):
+        return cfg.pairwise_fn()(qrows, crows, urows, lrows, cfg.w, cfg.v,
+                                 live=live)
 
     return BoundTier("enhanced_pairwise", cost="O(L)", scope="pairwise",
                      fn=fn)

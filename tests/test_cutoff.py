@@ -182,9 +182,10 @@ def test_dtw_band_early_exit_nocut_matches_plain(rng):
     np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
 
 
-def test_dtw_band_kernel_long_series_fallback(rng):
-    """L beyond _DTW_MAX_L routes to the (cutoff-aware) jnp reference."""
-    L = ops._DTW_MAX_L + 7
+def test_dtw_band_kernel_long_series_streams(rng):
+    """L beyond the residency crossover routes to the streaming kernel
+    (there is no length ceiling any more) with cutoff semantics intact."""
+    L = ops._DTW_RESIDENT_MAX_L + 7
     a = jnp.array(rng.normal(size=(2, L)).astype(np.float32))
     b = jnp.array(rng.normal(size=(2, L)).astype(np.float32))
     out = ops.dtw_band_op(a, b, 3, jnp.array([np.inf, 0.0], np.float32))

@@ -84,6 +84,35 @@ def test_lb_enhanced_pairwise_matches_cross_block_diagonal(rng):
                                rtol=1e-4, atol=1e-5)
 
 
+@pytest.mark.parametrize("P,L,w,v", [(9, 33, 7, 4), (130, 47, 11, 4),
+                                     (16, 128, 12, 0)])
+@pytest.mark.parametrize("bands_only", [False, True])
+def test_lb_enhanced_pairwise_live_slots(rng, P, L, w, v, bands_only):
+    """Per-slot liveness: dead slots emit -inf (the compaction scatter-max
+    identity), live slots are untouched, and an all-dead batch — whole
+    skipped tiles — still emits the right shape of -inf."""
+    q = jnp.array(rng.normal(size=(P, L)).astype(np.float32))
+    c = jnp.array(rng.normal(size=(P, L)).astype(np.float32))
+    u, lo = ops.envelope_op(c, w)
+    live = jnp.array(rng.integers(0, 2, size=(P,)).astype(np.int32))
+    got = ops.lb_enhanced_pairwise_op(q, c, u, lo, w, v, live=live,
+                                      bands_only=bands_only)
+    want = ref.lb_enhanced_pairwise_ref(q, c, u, lo, w, v, live=live,
+                                        bands_only=bands_only)
+    np.testing.assert_allclose(np.array(got), np.array(want),
+                               rtol=1e-4, atol=1e-5)
+    full = ops.lb_enhanced_pairwise_op(q, c, u, lo, w, v,
+                                       bands_only=bands_only)
+    lv = np.array(live).astype(bool)
+    np.testing.assert_allclose(np.array(got)[lv], np.array(full)[lv],
+                               rtol=1e-6)
+    assert np.all(np.array(got)[~lv] == -np.inf)
+    dead = ops.lb_enhanced_pairwise_op(q, c, u, lo, w, v,
+                                       live=jnp.zeros((P,), jnp.int32),
+                                       bands_only=bands_only)
+    assert dead.shape == (P,) and np.all(np.array(dead) == -np.inf)
+
+
 def test_lb_enhanced_pairwise_tile_sweep(rng):
     """VMEM tile shrink: any pair-tile size gives identical bounds."""
     from repro.kernels.lb_enhanced_pairwise import lb_enhanced_pairwise_pallas

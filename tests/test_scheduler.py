@@ -214,6 +214,28 @@ def test_unknown_schedule_vs_tiers_smoke():
 
 
 # ---------------------------------------------------------------------------
+# schedule-aware pair-tile sizing: geometry only, results + n_dtw invariant
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("tile", [None, 8, 16, 128])
+def test_verify_tile_p_is_result_and_ndtw_invariant(tile):
+    """The per-round pair-tile is packing geometry: any verify_tile_p
+    (and the None policy default) gives bit-equal results and identical
+    per-query n_dtw vs brute force and vs the kernel-default plan."""
+    ds, idx, cfg = _setup(k=2, verify=6)
+    base = nn_search(idx, ds.x_test, cfg,
+                     plan=default_plan(cfg.cascade, schedule="bound"))
+    plan = dataclasses.replace(
+        default_plan(cfg.cascade, schedule="bound"), verify_tile_p=tile)
+    res = nn_search(idx, ds.x_test, cfg, plan=plan)
+    bd, _ = brute_force(idx, ds.x_test, 8, k=2)
+    np.testing.assert_array_equal(np.array(res.dists), np.array(bd))
+    np.testing.assert_array_equal(np.array(res.dists), np.array(base.dists))
+    np.testing.assert_array_equal(np.array(res.idx), np.array(base.idx))
+    np.testing.assert_array_equal(np.array(res.n_dtw), np.array(base.n_dtw))
+
+
+# ---------------------------------------------------------------------------
 # compaction limit policy (the global-budget hook)
 # ---------------------------------------------------------------------------
 
@@ -242,6 +264,33 @@ def test_limit_fn_trades_tightness_never_exactness():
 # ---------------------------------------------------------------------------
 # adaptive-budget memo keys on (index, k, w)
 # ---------------------------------------------------------------------------
+
+def test_limit_fn_with_pre_liveness_custom_tier():
+    """A custom pairwise tier written to the old contract (no ``live``
+    kwarg) keeps working under a limit_fn compaction: the executor gives
+    it the maskless call and applies the slot mask itself."""
+    ds, idx, cfg0 = _setup(k=2)
+
+    def old_style_fn(qrows, crows, urows, lrows, cfg):   # no live kwarg
+        from repro.kernels.ref import lb_enhanced_pairwise_ref
+        return lb_enhanced_pairwise_ref(qrows, crows, urows, lrows,
+                                        cfg.w, cfg.v)
+
+    tier = BoundTier("old_pairwise", cost="O(L)", scope="pairwise",
+                     fn=old_style_fn)
+    plan = dataclasses.replace(
+        default_plan(cfg0.cascade),
+        tiers=(*default_plan(cfg0.cascade).all_pairs_tiers, tier),
+        compaction=Compaction(
+            budget=8,
+            limit_fn=lambda lb01, B, k: jnp.full(
+                (lb01.shape[0],), 3, jnp.int32),
+        ),
+    )
+    res = nn_search(idx, ds.x_test, cfg0, plan=plan)
+    bd, _ = brute_force(idx, ds.x_test, 8, k=2)
+    np.testing.assert_array_equal(np.array(res.dists), np.array(bd))
+
 
 def test_budget_memo_keys_on_index_k_w(monkeypatch):
     """A bucket estimated for k=1 must not be reused for k=3 (tau grows
