@@ -1,9 +1,12 @@
 """End-to-end driver: NN-DTW time-series classification with the
 LB_ENHANCED cascade (the paper's headline application, SS IV-B).
 
-Builds a UCR-like dataset, indexes the training set, classifies the test
-set with the tiered cascade + exact verification, and reports accuracy,
-pruning power and timing vs the unpruned brute force.
+Builds a UCR-like dataset, indexes the training set *with store-level
+plan calibration* (the planner prices every tier on a sample of the
+store and commits the optimised verification plan — search/planner.py),
+classifies the test set with the committed plan + exact verification,
+and reports accuracy, the paper's Fig.-style per-tier pruning-power
+table, and timing vs the unpruned brute force.
 
 Run: PYTHONPATH=src python examples/ucr_classification.py [--window 0.2]
 """
@@ -12,7 +15,7 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp  # noqa: F401
+import jax.numpy as jnp
 import numpy as np
 
 from repro.data import make_dataset
@@ -21,8 +24,10 @@ from repro.search import (
     EngineConfig,
     brute_force,
     build_index,
-    classify,
+    default_plan,
+    nn_search,
 )
+from repro.search import planner as plr
 
 
 def main() -> None:
@@ -44,15 +49,31 @@ def main() -> None:
     print(f"dataset: {ds.x_train.shape[0]} train / {ds.x_test.shape[0]} test, "
           f"L={ds.length}, W={w}, V={args.v}")
 
-    idx = build_index(ds.x_train, w, ds.y_train)
     # use_pallas=False: on this CPU container the Pallas kernels run in
     # interpret mode (semantics-only); the jnp path gives honest wall-clock.
-    cfg = EngineConfig(cascade=CascadeConfig(w=w, v=args.v, use_pallas=False),
-                       verify_chunk=64, k=1)
+    cfg = EngineConfig(
+        cascade=CascadeConfig(w=w, v=args.v, use_pallas=False),
+        verify_chunk=64, k=1, auto_plan=True,
+    )
+    # store-level calibration: the planner prices the default plan on a
+    # sample of the store itself and commits the optimised plan, so the
+    # first real query batch below starts warm
+    idx = build_index(ds.x_train, w, ds.y_train, calibrate=cfg)
+    decision = plr.lookup_plan(idx, cfg.cascade, cfg.k,
+                               default_plan(cfg.cascade))
+    print(f"committed plan    : {decision.summary()}")
 
-    # jit + warm up both paths; report steady-state step time
-    from repro.search import nn_search
-    cascade_fn = jax.jit(lambda qq: nn_search(idx, qq, cfg).dists)
+    # search the test set under the committed plan, with the pruning report
+    res, stats = nn_search(idx, ds.x_test, cfg, with_stats=True)
+    votes = idx.labels[res.idx]                                    # (Q, k)
+    pred = np.array(votes[:, 0])
+
+    # jit + warm up both paths (the committed plan pinned explicitly —
+    # calibration is host-side, so a traced search runs the plan it is
+    # given); report steady-state step time
+    cascade_fn = jax.jit(
+        lambda qq: nn_search(idx, qq, cfg, plan=decision.plan).dists
+    )
     brute_fn = jax.jit(
         lambda qq: brute_force(idx, qq, w, k=1, use_pallas=False)[0]
     )
@@ -67,14 +88,15 @@ def main() -> None:
     jax.block_until_ready(brute_fn(qj))
     t_brute = time.perf_counter() - t0
 
-    pred, res = classify(idx, ds.x_test, cfg)
     bd, _ = brute_force(idx, ds.x_test, w, k=1, use_pallas=False)
-
-    acc = float(np.mean(np.array(pred) == ds.y_test))
+    acc = float(np.mean(pred == ds.y_test))
     prune = float(np.mean(np.array(res.pruning_power())))
     assert np.allclose(np.array(res.dists), np.array(bd), rtol=1e-4), \
         "cascade changed the NN result!"
 
+    print()
+    print(stats.table())       # the paper's pruning-power readout, per tier
+    print()
     print(f"accuracy          : {acc:.1%}")
     print(f"pruning power     : {prune:.1%} of DTW computations skipped")
     print(f"mean DTW verified : {float(np.mean(np.asarray(res.n_dtw))):.1f} "

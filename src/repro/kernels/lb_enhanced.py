@@ -27,6 +27,16 @@ The paper's per-pair early abandon (Alg. 1 line 12) is deliberately absent:
 on TPU it becomes cascade-tier compaction (see search/cascade.py), and the
 bands-only tier is exposed separately via ``bands_only=True``.
 
+Per-candidate liveness (``live``): liveness parity with the pairwise
+kernel (PR 4) for the *dense* tier — the planner (search/planner.py) can
+limit-mask a cross-block tier the same way it limit-masks the packed
+tiers.  ``live`` is a ``(C,)`` per-candidate mask: dead candidates emit
+``-inf`` down their whole output column (the running-max identity, so a
+masked dense tier folds into the cascade as a no-op on dead candidates),
+and a candidate tile whose lanes are *all* dead skips the band/bridge
+compute entirely via the same SMEM-flag ``pl.when`` mechanism the
+pairwise and DTW tiles use.
+
 VMEM: q (TQ, L) + c/u/lo (3*TC, L) + out (TQ, TC).
 TQ=8, TC=128, L=4096 -> ~6.4 MB f32.
 """
@@ -39,13 +49,18 @@ import jax
 import jax.numpy as jnp
 from jax import lax
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 Array = jax.Array
 
+_INF = float(jnp.inf)
 
-def _lb_enhanced_kernel(
-    q_ref, c_ref, u_ref, l_ref, out_ref, *, nb: int, bands_only: bool
-):
+
+def _block_rows(q_ref, c_ref, u_ref, l_ref, out_ref, *, nb: int,
+                bands_only: bool, live=None):
+    """Write the (TQ, TC) bound block row by row (shared by the live-gated
+    and ungated kernel bodies); ``live`` masks dead candidate lanes to
+    ``-inf``."""
     c = c_ref[...]            # (TC, L)
     tq = q_ref.shape[0]
     L = q_ref.shape[1]
@@ -80,10 +95,34 @@ def _lb_enhanced_kernel(
             over = jnp.maximum(qb - u[:, nb : L - nb], 0.0)
             under = jnp.maximum(lo[:, nb : L - nb] - qb, 0.0)
             acc = acc + jnp.sum(over * over + under * under, axis=-1)
-        out_ref[i, :] = acc
+        out_ref[i, :] = acc if live is None else jnp.where(live, acc, -_INF)
         return 0
 
     lax.fori_loop(0, tq, row, 0, unroll=True)
+
+
+def _lb_enhanced_kernel(
+    q_ref, c_ref, u_ref, l_ref, out_ref, *, nb: int, bands_only: bool
+):
+    _block_rows(q_ref, c_ref, u_ref, l_ref, out_ref, nb=nb,
+                bands_only=bands_only)
+
+
+def _lb_enhanced_kernel_live(
+    q_ref, c_ref, u_ref, l_ref, live_ref, out_ref, flag_ref, *, nb: int,
+    bands_only: bool
+):
+    """Live-gated candidate tile: dead candidates emit -inf columns,
+    all-dead tiles skip the band/bridge compute entirely (SMEM flag +
+    ``pl.when`` — the pairwise/DTW tiles' liveness mechanism)."""
+    live = live_ref[...] != 0                           # (TC,)
+    flag_ref[0] = jnp.any(live).astype(jnp.int32)
+    out_ref[...] = jnp.full(out_ref.shape, -_INF, out_ref.dtype)
+
+    @pl.when(flag_ref[0] == 1)
+    def _compute():
+        _block_rows(q_ref, c_ref, u_ref, l_ref, out_ref, nb=nb,
+                    bands_only=bands_only, live=live)
 
 
 @functools.partial(
@@ -98,17 +137,26 @@ def lb_enhanced_pallas(
     w: int,
     v: int,
     *,
+    live: Array | None = None,
     bands_only: bool = False,
     tile_q: int = 8,
     tile_c: int = 128,
     interpret: bool = False,
 ) -> Array:
-    """``(Q, L) x (C, L) -> (Q, C)`` fused LB_ENHANCED^V matrix."""
+    """``(Q, L) x (C, L) -> (Q, C)`` fused LB_ENHANCED^V matrix.
+
+    ``live`` (optional ``(C,)`` bool/int) marks which candidates are worth
+    scoring: dead candidates return ``-inf`` for every query and
+    fully-dead candidate tiles skip their compute (module docstring).
+    ``None`` scores every candidate.
+    """
     Q, L = q.shape
     C, _ = c.shape
     nb = max(0, min(L // 2, w, v))
     tile_q = min(tile_q, Q)
     tile_c = min(tile_c, C)
+    if live is not None:
+        live = jnp.broadcast_to(jnp.asarray(live), (C,)).astype(jnp.int32)
     pq, pc = (-Q) % tile_q, (-C) % tile_c
     if pq:
         q = jnp.pad(q, ((0, pq), (0, 0)))
@@ -116,18 +164,38 @@ def lb_enhanced_pallas(
         c = jnp.pad(c, ((0, pc), (0, 0)))
         u = jnp.pad(u, ((0, pc), (0, 0)), constant_values=jnp.inf)
         lo = jnp.pad(lo, ((0, pc), (0, 0)), constant_values=-jnp.inf)
+        if live is not None:
+            # pad candidates are dead, so they never hold a tile's flag up
+            live = jnp.pad(live, (0, pc))
     Qp, Cp = Q + pq, C + pc
-    out = pl.pallas_call(
-        functools.partial(_lb_enhanced_kernel, nb=nb, bands_only=bands_only),
-        grid=(Qp // tile_q, Cp // tile_c),
-        in_specs=[
-            pl.BlockSpec((tile_q, L), lambda i, j: (i, 0)),
-            pl.BlockSpec((tile_c, L), lambda i, j: (j, 0)),
-            pl.BlockSpec((tile_c, L), lambda i, j: (j, 0)),
-            pl.BlockSpec((tile_c, L), lambda i, j: (j, 0)),
-        ],
-        out_specs=pl.BlockSpec((tile_q, tile_c), lambda i, j: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((Qp, Cp), q.dtype),
-        interpret=interpret,
-    )(q, c, u, lo)
+    grid = (Qp // tile_q, Cp // tile_c)
+    out_shape = jax.ShapeDtypeStruct((Qp, Cp), q.dtype)
+    in_specs = [
+        pl.BlockSpec((tile_q, L), lambda i, j: (i, 0)),
+        pl.BlockSpec((tile_c, L), lambda i, j: (j, 0)),
+        pl.BlockSpec((tile_c, L), lambda i, j: (j, 0)),
+        pl.BlockSpec((tile_c, L), lambda i, j: (j, 0)),
+    ]
+    out_specs = pl.BlockSpec((tile_q, tile_c), lambda i, j: (i, j))
+    if live is None:
+        out = pl.pallas_call(
+            functools.partial(_lb_enhanced_kernel, nb=nb,
+                              bands_only=bands_only),
+            grid=grid,
+            in_specs=in_specs,
+            out_specs=out_specs,
+            out_shape=out_shape,
+            interpret=interpret,
+        )(q, c, u, lo)
+    else:
+        out = pl.pallas_call(
+            functools.partial(_lb_enhanced_kernel_live, nb=nb,
+                              bands_only=bands_only),
+            grid=grid,
+            in_specs=in_specs + [pl.BlockSpec((tile_c,), lambda i, j: (j,))],
+            out_specs=out_specs,
+            out_shape=out_shape,
+            scratch_shapes=[pltpu.SMEM((1,), jnp.int32)],
+            interpret=interpret,
+        )(q, c, u, lo, live)
     return out[:Q, :C]

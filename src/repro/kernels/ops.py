@@ -66,13 +66,23 @@ def lb_keogh_op(q: Array, u: Array, lo: Array) -> Array:
 
 def lb_enhanced_op(
     q: Array, c: Array, u: Array, lo: Array, w: int, v: int,
-    *, bands_only: bool = False,
+    *, live: Array | None = None, bands_only: bool = False,
 ) -> Array:
-    """``(Q, L) x (C, L) -> (Q, C)`` fused LB_ENHANCED^V matrix."""
+    """``(Q, L) x (C, L) -> (Q, C)`` fused LB_ENHANCED^V matrix.
+
+    ``live`` (optional ``(C,)``) marks the candidates worth scoring: dead
+    candidates return ``-inf`` for every query (the running-max identity)
+    and fully-dead candidate tiles skip their compute — liveness parity
+    with the pairwise kernel, so the planner can limit-mask a dense
+    cross-block tier too (see kernels/lb_enhanced.py).
+    """
     if q.shape[-1] > _LB_MAX_L:
-        return ref.lb_enhanced_ref(q, c, u, lo, w, v, bands_only=bands_only)
+        return ref.lb_enhanced_ref(
+            q, c, u, lo, w, v, live=live, bands_only=bands_only
+        )
     return lb_enhanced_pallas(
-        q, c, u, lo, w, v, bands_only=bands_only, interpret=_interpret()
+        q, c, u, lo, w, v, live=live, bands_only=bands_only,
+        interpret=_interpret(),
     )
 
 

@@ -33,16 +33,29 @@ def lb_keogh_ref(q: Array, u: Array, lo: Array) -> Array:
 
 def lb_enhanced_ref(
     q: Array, c: Array, u: Array, lo: Array, w: int, v: int,
-    *, bands_only: bool = False,
+    *, live: Array | None = None, bands_only: bool = False,
 ) -> Array:
-    """``(Q, L) x (C, L) -> (Q, C)`` LB_ENHANCED^V (or bands-only tier)."""
+    """``(Q, L) x (C, L) -> (Q, C)`` LB_ENHANCED^V (or bands-only tier).
+
+    ``live`` mirrors the cross-block kernel's per-candidate liveness
+    input: dead candidates return ``-inf`` down their whole column.  The
+    reference computes everything and masks — the *semantics* of
+    skipping, which is all an oracle owes.
+    """
     if bands_only:
         fn = jax.vmap(
             jax.vmap(_lb.lb_enhanced_bands, (None, 0, None, None)),
             (0, None, None, None),
         )
-        return fn(q, c, w, v)
-    return _lb.lb_enhanced_matrix(q, c, u, lo, w, v)
+        out = fn(q, c, w, v)
+    else:
+        out = _lb.lb_enhanced_matrix(q, c, u, lo, w, v)
+    if live is not None:
+        live = jnp.broadcast_to(
+            jnp.asarray(live), (out.shape[1],)
+        ).astype(bool)
+        out = jnp.where(live[None, :], out, -jnp.inf)
+    return out
 
 
 def lb_enhanced_pairwise_ref(

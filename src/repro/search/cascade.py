@@ -88,9 +88,12 @@ from repro.kernels.ops import (
 from repro.kernels.ref import dtw_band_ref
 from repro.search.index import DTWIndex, kim_features
 from repro.search.pipeline import (
+    TierStats,
     VerificationPlan,
+    bucket_pow2,
     default_plan,
     dense_plan,
+    tier_cost_weight,
 )
 
 Array = jax.Array
@@ -105,10 +108,7 @@ _BUDGET_FLOOR = 64
 
 def _bucket_up(x: int) -> int:
     """Round ``x`` up to the next power-of-two budget bucket (>= 64)."""
-    b = _BUDGET_FLOOR
-    while b < x:
-        b <<= 1
-    return b
+    return bucket_pow2(x, _BUDGET_FLOOR)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -174,11 +174,15 @@ class CascadeResult:
         pairwise tiers on the compacted survivors, exact DTW at the seeds).
       seed_idx: (Q, k) candidate ids verified for the provisional threshold.
       seed_d: (Q, k) their exact banded-DTW distances.
+      stats: measured per-tier pricing (``TierStats``) when the plan was
+        executed with ``collect_stats=True`` — the planner's input;
+        ``None`` otherwise.
     """
 
     lb: Array
     seed_idx: Array
     seed_d: Array
+    stats: TierStats | None = None
 
 
 def lb_kim_tier(q: Array, index: DTWIndex) -> Array:
@@ -206,21 +210,26 @@ def _chunked(
     return jnp.concatenate(outs, axis=1) if len(outs) > 1 else outs[0]
 
 
-def _accepts_live(fn) -> bool:
-    """Whether a pairwise tier fn takes the ``live`` slot-mask kwarg.
+def _accepts_kw(fn, name: str) -> bool:
+    """Whether ``fn`` takes the keyword ``name`` (or ``**kwargs``).
 
-    Custom tiers written to the pre-liveness contract (positional args
-    only) must keep working under a ``limit_fn`` compaction: they get the
-    maskless call and the executor's belt mask below handles their dead
-    slots instead.
+    The executor's newer hooks are optional keywords — ``live`` on
+    pairwise tier fns, ``tile_p`` on the DTW dispatch — and custom
+    callbacks written to the older positional contracts must keep
+    working: they get the plain call and the executor's own fallbacks
+    (the belt mask below, the kernel-default tile) cover the rest.
     """
     try:
         params = inspect.signature(fn).parameters
     except (TypeError, ValueError):   # builtins/partials without signatures
         return False
-    return "live" in params or any(
+    return name in params or any(
         p.kind is inspect.Parameter.VAR_KEYWORD for p in params.values()
     )
+
+
+def _accepts_live(fn) -> bool:
+    return _accepts_kw(fn, "live")
 
 
 def choose_survivor_budget(
@@ -323,10 +332,20 @@ def compute_bounds(
     return lb
 
 
-def enhanced_all_pairs(q: Array, index: DTWIndex, cfg: CascadeConfig) -> Array:
+def enhanced_all_pairs(
+    q: Array, index: DTWIndex, cfg: CascadeConfig,
+    *, live: Array | None = None,
+) -> Array:
     """(Q, N) dense O(L) LB_ENHANCED tier — the ``enhanced_dense`` tier's
     bound fn.  Chunked over candidates so each fused-kernel call matches
-    the VMEM tiling documented in kernels/lb_enhanced.py."""
+    the VMEM tiling documented in kernels/lb_enhanced.py.
+
+    ``live`` (optional ``(N,)``) limit-masks the dense tier the way the
+    refine limit masks the packed pairwise tiers: dead candidates come
+    back ``-inf`` (the running-max identity) and fully-dead candidate
+    tiles skip their compute in the kernel — the planner's lever for a
+    cross-block tier whose mass does not pay everywhere.
+    """
     n = index.n
     chunk = min(cfg.candidate_chunk, n)
     lb_fn = cfg.lb_fn()
@@ -340,6 +359,7 @@ def enhanced_all_pairs(q: Array, index: DTWIndex, cfg: CascadeConfig) -> Array:
             index.lower[s:e],
             cfg.w,
             cfg.v,
+            live=None if live is None else live[s:e],
         )
 
     return _chunked(tier2, n, chunk)
@@ -354,6 +374,7 @@ def run_plan(
     dtw_fn: Callable | None = None,
     *,
     exclude: Array | None = None,
+    collect_stats: bool = False,
 ) -> CascadeResult:
     """Execute a ``VerificationPlan``: all-pairs tiers -> compact ->
     pairwise tiers -> seed verification.
@@ -362,6 +383,16 @@ def run_plan(
     and inside the distributed ``shard_map``.  ``exclude`` removes a
     per-query candidate (leave-one-out) from seeding and compaction; its
     bound entry is left untouched for the engine to mask.
+
+    ``collect_stats`` makes the executor *instrumented*: it snapshots the
+    running bound after every tier and, once the seeds fix the threshold
+    ``tau`` (k-th seed distance), prices each tier — incremental realised
+    pruning mass, pairs scored, cost-class-weighted work — into a
+    ``TierStats`` on the result (the planner's measurement input, see
+    search/planner.py).  The accounting is pure jnp reductions, so the
+    instrumented executor still traces under jit/shard_map; the snapshots
+    cost ``O(T)`` extra bound-matrix copies, which is why stats are
+    opt-in calibration machinery, not an always-on path.
     """
     plan = plan if plan is not None else default_plan(cfg)
     q = jnp.asarray(q, jnp.float32)
@@ -374,9 +405,12 @@ def run_plan(
 
     # ---- all-pairs tiers, in plan order (running elementwise max) ------
     lb01 = None
+    ap_snaps = []                      # running max after each tier (stats)
     for tier in plan.all_pairs_tiers:
         t = tier.fn(q, index, cfg)
         lb01 = t if lb01 is None else jnp.maximum(lb01, t)
+        if collect_stats:
+            ap_snaps.append(lb01)
     if lb01 is None:
         lb01 = jnp.zeros((Q, n), q.dtype)
 
@@ -405,6 +439,7 @@ def run_plan(
         # ---- pairwise tiers on the packed survivor batches -------------
         chunk = min(cfg.candidate_chunk, W)
         cols = []
+        pw_snaps = [[] for _ in pairwise_tiers]   # per-tier running max
         for s in range(0, W, chunk):
             e = min(s + chunk, W)
             cidx = cand[:, s:e].reshape(-1)          # (Q * bc,)
@@ -424,12 +459,20 @@ def run_plan(
                 else (slot < limit[:, None]).reshape(-1)     # (Q * bc,)
             )
             pe = None
-            for tier in pairwise_tiers:
+            for ti, tier in enumerate(pairwise_tiers):
                 if live is not None and _accepts_live(tier.fn):
                     t = tier.fn(qf, crows, urows, lrows, cfg, live=live)
                 else:   # no limit, or a pre-liveness custom tier
                     t = tier.fn(qf, crows, urows, lrows, cfg)
                 pe = t if pe is None else jnp.maximum(pe, t)
+                if collect_stats:
+                    # running pairwise max after this tier, dead slots at
+                    # the -inf scatter-max identity (the belt mask keeps
+                    # pre-liveness custom tiers honest here too)
+                    snap = pe.reshape(Q, e - s)
+                    if limit is not None:
+                        snap = jnp.where(slot < limit[:, None], snap, -_INF)
+                    pw_snaps[ti].append(snap)
             block = pe.reshape(Q, e - s)
             if limit is not None:
                 # belt for tiers without ``live`` support: the mask is
@@ -453,15 +496,95 @@ def run_plan(
     cs = index.series[seed_idx.reshape(-1)]
     # seeds are the tightest-bound pairs — almost all live, so the
     # per-round tile policy keeps full tiles here; an explicit plan
-    # verify_tile_p still overrides (pipeline.py)
-    if plan.verify_tile_p is not None:
+    # verify_tile_p still overrides (pipeline.py) when the dispatch
+    # understands it (a custom dtw_fn on the old (a, b, w) contract gets
+    # the plain call — tile size is packing geometry, never semantics)
+    if plan.verify_tile_p is not None and _accepts_kw(dtw_fn, "tile_p"):
         seed_d = dtw_fn(qs, cs, cfg.w, tile_p=plan.verify_tile_p)
     else:
         seed_d = dtw_fn(qs, cs, cfg.w)
     seed_d = seed_d.reshape(Q, k)
     # seed pairs are exactly verified: their distance is the perfect bound
     lb = lb.at[qarange[:, None], seed_idx].max(seed_d)
-    return CascadeResult(lb=lb, seed_idx=seed_idx, seed_d=seed_d)
+
+    stats = None
+    if collect_stats:
+        # ---- tier pricing against the seed-verified threshold ----------
+        # tau upper-bounds each query's final k-th best, so a pair whose
+        # running bound reaches tau is realised pruning; the crossing is
+        # attributed to the tier whose fold first took it across.
+        tau = jnp.max(seed_d, axis=1, keepdims=True)          # (Q, 1)
+        excl = (
+            None if exclude is None
+            else jnp.arange(n)[None, :] == exclude[:, None]
+        )
+
+        def _crossed(prev, cur, emask):
+            newly = (cur >= tau) & (prev < tau)
+            if emask is not None:
+                newly = newly & ~emask
+            return jnp.sum(newly).astype(jnp.float32)
+
+        names, costs, scopes = [], [], []
+        mass, scored, work = [], [], []
+        prev_ap = jnp.zeros((Q, n), q.dtype)
+        for i, tier in enumerate(plan.all_pairs_tiers):
+            names.append(tier.name)
+            costs.append(tier.cost)
+            scopes.append(tier.scope)
+            mass.append(_crossed(prev_ap, ap_snaps[i], excl))
+            sc = jnp.asarray(float(Q * n), jnp.float32)
+            scored.append(sc)
+            work.append(sc * tier_cost_weight(tier.cost, L, cfg.v, cfg.w))
+            prev_ap = ap_snaps[i]
+        if pairwise_tiers:
+            base = lb01[qarange[:, None], cand]               # (Q, W)
+            pexcl = None if exclude is None else cand == exclude[:, None]
+            # under a refine limit a liveness-conforming tier scores only
+            # its live slots — that is the work the planner prices, and
+            # the belt mask holds pre-liveness custom tiers to the same
+            # semantics
+            pscored = (
+                jnp.sum(limit).astype(jnp.float32) if limit is not None
+                else jnp.asarray(float(Q * W), jnp.float32)
+            )
+            prev_pw = base
+            for ti, tier in enumerate(pairwise_tiers):
+                pe_full = (
+                    jnp.concatenate(pw_snaps[ti], axis=1)
+                    if len(pw_snaps[ti]) > 1 else pw_snaps[ti][0]
+                )
+                cur_pw = jnp.maximum(base, pe_full)
+                names.append(tier.name)
+                costs.append(tier.cost)
+                scopes.append(tier.scope)
+                mass.append(_crossed(prev_pw, cur_pw, pexcl))
+                scored.append(pscored)
+                work.append(
+                    pscored * tier_cost_weight(tier.cost, L, cfg.v, cfg.w)
+                )
+                prev_pw = cur_pw
+        surv_key = (
+            lb01 if exclude is None
+            else lb01.at[qarange, exclude].set(_INF)
+        )
+        survivors = jnp.sum(surv_key < tau, axis=1).astype(jnp.float32)
+        zero = jnp.zeros((0,), jnp.float32)
+        stats = TierStats(
+            names=tuple(names),
+            costs=tuple(costs),
+            scopes=tuple(scopes),
+            mass=jnp.stack(mass) if mass else zero,
+            scored=jnp.stack(scored) if scored else zero,
+            work=jnp.stack(work) if work else zero,
+            pairs=jnp.asarray(
+                float(Q * (n - 1 if exclude is not None else n)),
+                jnp.float32,
+            ),
+            queries=jnp.asarray(float(Q), jnp.float32),
+            survivors=survivors,
+        )
+    return CascadeResult(lb=lb, seed_idx=seed_idx, seed_d=seed_d, stats=stats)
 
 
 def staged_bounds(

@@ -74,7 +74,13 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.search.engine import EngineConfig, nn_search
 from repro.search.index import DTWIndex
-from repro.search.pipeline import Compaction, default_plan, dense_plan
+from repro.search.pipeline import (
+    Compaction,
+    TierStats,
+    VerificationPlan,
+    default_plan,
+    dense_plan,
+)
 
 Array = jax.Array
 
@@ -127,6 +133,137 @@ def global_budget_limit_fn(axes: tuple[str, ...]):
     return limit_fn
 
 
+def _default_distributed_plan(
+    cfg: EngineConfig,
+    axes: tuple[str, ...],
+    global_budget: bool,
+) -> VerificationPlan:
+    plan = (
+        default_plan(cfg.cascade) if cfg.cascade.staged
+        else dense_plan(cfg.cascade)
+    )
+    if global_budget and cfg.cascade.staged:
+        plan = dataclasses.replace(
+            plan, compaction=Compaction(limit_fn=global_budget_limit_fn(axes))
+        )
+    return plan
+
+
+def gather_tier_stats(
+    stats: TierStats,
+    data_axes: tuple[str, ...],
+    query_axis: str | None = None,
+) -> TierStats:
+    """Merge shard-local ``TierStats`` into one fleet measurement.
+
+    For use *inside* ``shard_map`` (the same collective machinery as
+    ``global_budget_limit_fn``): per-tier mass/scored/work and the pair
+    count are summed over every shard (candidate partitions over the data
+    axes, disjoint query blocks over ``query_axis``), the query count over
+    the query axis only, and the per-query survivor counts are
+    max-reduced — the committed refine limit must cover the *heaviest*
+    shard's measured need, not the fleet average.  After the merge every
+    shard holds the same global measurement, so every shard derives the
+    same plan decision — one committed plan for the fleet.
+    """
+    daxes = tuple(data_axes)
+    axes = daxes + ((query_axis,) if query_axis is not None else ())
+    surv = lax.pmax(stats.survivors, daxes)
+    if query_axis is not None:
+        surv = lax.pmax(jnp.max(surv, keepdims=True), query_axis)
+    return dataclasses.replace(
+        stats,
+        mass=lax.psum(stats.mass, axes),
+        scored=lax.psum(stats.scored, axes),
+        work=lax.psum(stats.work, axes),
+        pairs=lax.psum(stats.pairs, axes),
+        queries=(
+            lax.psum(stats.queries, (query_axis,))
+            if query_axis is not None else stats.queries
+        ),
+        survivors=surv,
+    )
+
+
+def calibrate_distributed_plan(
+    mesh: Mesh,
+    cfg: EngineConfig,
+    series, labels, upper, lower, kim, kim_ok, queries,
+    *,
+    data_axes: tuple[str, ...] = ("data",),
+    query_axis: str = "model",
+    global_budget: bool = True,
+    sample: int = 8,
+    pcfg=None,
+) -> "PlanDecision":
+    """Measure the base plan across the mesh and derive one global plan.
+
+    The distributed calibrate-then-commit: every shard runs the
+    instrumented executor on a ``sample``-query block of its local query
+    shard against its local candidate shard, the shard measurements are
+    ``psum``/``pmax``-merged over the mesh (``gather_tier_stats`` — the
+    ``global_budget_limit_fn`` gather machinery applied to stats), and the
+    host turns the *global* measurement into a single ``PlanDecision``.
+    Because the merged stats are identical on every shard, the decision is
+    too: pass ``decision.plan`` to ``make_distributed_search(plan=...)``
+    and all shards commit to the same rewritten plan, with the planner's
+    refine limit composed into the global-budget allocation
+    (``limit = min(mass-proportional share, committed cap)``).
+
+    Takes the sharded index leaves + queries the search step itself takes.
+    Calibration cost: one instrumented bound pass + ``sample * k`` seed
+    DTWs per shard, paid once per (store, config).
+    """
+    from repro.search.cascade import run_plan
+    from repro.search.planner import calibration_sample, optimise_plan
+
+    axes = tuple(data_axes)
+    base = _default_distributed_plan(cfg, axes, global_budget)
+    k = cfg.k
+    n_data_shards = 1
+    for a in axes:
+        n_data_shards *= mesh.shape[a]
+
+    def probe(series, labels, upper, lower, kim, kim_ok, queries):
+        index = DTWIndex(
+            series=series, labels=labels, upper=upper, lower=lower,
+            kim=kim, kim_ok=kim_ok, w=cfg.cascade.w,
+        )
+        # strided local sample (static indices): every region of a
+        # class-ordered query shard lands in the measurement
+        qs = queries[calibration_sample(queries.shape[0], sample)]
+        cres = run_plan(qs, index, cfg.cascade, base, k=k,
+                        collect_stats=True)
+        st = gather_tier_stats(cres.stats, axes, query_axis)
+        return (st.mass, st.scored, st.work, st.pairs[None],
+                st.queries[None], st.survivors)
+
+    in_specs = (
+        P(axes, None), P(axes), P(axes, None), P(axes, None),
+        P(axes, None), P(axes, None), P(query_axis, None),
+    )
+    out_specs = (P(None), P(None), P(None), P(None), P(None), P(None))
+    from repro.distributed.sharding import shard_map_compat
+    probe_fn = shard_map_compat(
+        probe, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+    )
+    mass, scored, work, pairs, n_q, surv = probe_fn(
+        series, labels, upper, lower, kim, kim_ok, queries
+    )
+    stats = TierStats(
+        names=tuple(t.name for t in base.tiers),
+        costs=tuple(t.cost for t in base.tiers),
+        scopes=tuple(t.scope for t in base.tiers),
+        mass=mass, scored=scored, work=work,
+        pairs=pairs[0], queries=n_q[0], survivors=surv,
+    )
+    n_local = max(1, series.shape[0] // n_data_shards)
+    return optimise_plan(
+        base, stats, n=n_local, k=k,
+        base_budget=cfg.cascade.budget(n_local, k), pcfg=pcfg,
+    )
+
+
 def make_distributed_search(
     mesh: Mesh,
     cfg: EngineConfig,
@@ -134,6 +271,7 @@ def make_distributed_search(
     data_axes: tuple[str, ...] = ("data",),
     query_axis: str = "model",
     global_budget: bool = True,
+    plan: VerificationPlan | None = None,
 ):
     """Build a jittable distributed search step for ``mesh``.
 
@@ -145,17 +283,15 @@ def make_distributed_search(
     ``global_budget`` (staged cascades only) swaps the per-shard local
     survivor budget for the mass-proportional global allocation described
     in the module docstring; ``False`` keeps fully-local compaction.
+
+    ``plan`` overrides the default tier plan on every shard — this is how
+    a ``calibrate_distributed_plan`` decision commits: the calibrated
+    plan already carries the composed global-budget/refine-limit
+    compaction, so it is used as-is.
     """
     axes = tuple(data_axes)
-    use_global = global_budget and cfg.cascade.staged
-    plan = (
-        default_plan(cfg.cascade) if cfg.cascade.staged
-        else dense_plan(cfg.cascade)
-    )
-    if use_global:
-        plan = dataclasses.replace(
-            plan, compaction=Compaction(limit_fn=global_budget_limit_fn(axes))
-        )
+    if plan is None:
+        plan = _default_distributed_plan(cfg, axes, global_budget)
 
     def local_step(series, labels, upper, lower, kim, kim_ok, queries):
         index = DTWIndex(

@@ -49,11 +49,13 @@ import dataclasses
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax import lax
 
 from repro.kernels.ops import dtw_band_op
 from repro.kernels.ref import dtw_band_ref
 from repro.kernels.tiling import sched_pair_tile, unpermute_pairs
+from repro.search import planner as _planner
 from repro.search.cascade import (
     CascadeConfig,
     compute_bounds,
@@ -61,11 +63,13 @@ from repro.search.cascade import (
 )
 from repro.search.index import DTWIndex
 from repro.search.pipeline import (
+    TierStats,
     VerificationPlan,
     default_plan,
     dense_plan,
     resolve_adaptive_budget,
 )
+from repro.search.planner import PlannerConfig
 
 Array = jax.Array
 
@@ -104,11 +108,119 @@ class EngineConfig:
         the paper's one-at-a-time loop; each round is one fused kernel
         launch of ``Q * verify_chunk`` banded-DTW lane problems).
       k: neighbours to return.
+      auto_plan: calibrate-then-commit (staged cascades, concrete inputs
+        only): a cold search runs its first query block under the base
+        plan with the instrumented executor, hands the measured
+        ``TierStats`` to the planner, and runs every remaining block —
+        and every later search against the same store/config — under the
+        committed optimised plan (search/planner.py).  Results are
+        bit-equal by construction: the planner only removes bound work,
+        and unrefined pairs keep a valid looser bound.  Under tracing the
+        flag is inert (the base plan runs unchanged), like the adaptive
+        budget.
+      planner: decision thresholds for the commit (``None`` =
+        ``PlannerConfig()`` defaults).
     """
 
     cascade: CascadeConfig
     verify_chunk: int = 32
     k: int = 1
+    auto_plan: bool = False
+    planner: PlannerConfig | None = None
+
+
+@dataclasses.dataclass(frozen=True)
+class SearchStats:
+    """Public pruning report for one search (host-side).
+
+    The paper's Fig.-style pruning-power readout as an API: which tiers
+    the committed plan ran, what each measured tier bought (realised
+    pruning mass vs cost-weighted work), what the planner decided, and
+    what the engine verified.  Produced by ``nn_search(...,
+    with_stats=True)``; ``table()`` renders the per-tier table the
+    examples print.
+
+    Attributes:
+      tiers: the measured ``TierStats`` (base-plan pricing when the
+        search calibrated, the executed plan's pricing otherwise).
+      plan_tiers: committed tier names, in committed order.
+      schedule: committed verification schedule.
+      dropped: tiers the planner removed (empty without ``auto_plan``).
+      budget / limit: committed compaction bucket / refine limit
+        (``None`` = untouched).
+      calibrated: whether a planner decision produced the committed plan.
+      n_dtw: (Q,) DTW verifications per query.
+      n: store size (the pruning-power denominator).
+    """
+
+    tiers: TierStats
+    plan_tiers: tuple[str, ...]
+    schedule: str
+    dropped: tuple[str, ...]
+    budget: int | None
+    limit: int | None
+    calibrated: bool
+    n_dtw: Array
+    n: int
+
+    def pruning_power(self) -> Array:
+        return 1.0 - np.asarray(self.n_dtw) / self.n
+
+    def table(self) -> str:
+        nd = np.asarray(self.n_dtw)
+        lines = [self.tiers.table(), "-" * 78]
+        commit = f"plan: {' -> '.join(self.plan_tiers) or '<no tiers>'} " \
+                 f"[{self.schedule}]"
+        if self.dropped:
+            commit += f"   dropped: {', '.join(self.dropped)}"
+        if self.budget is not None:
+            commit += f"   budget={self.budget}"
+        if self.limit is not None:
+            commit += f"   limit={self.limit}"
+        if self.calibrated:
+            commit += "   (planner-committed)"
+        lines.append(commit)
+        lines.append(
+            f"n_dtw: {int(nd.sum())} of {nd.size * self.n} pairs verified "
+            f"(mean pruning power {float(np.mean(self.pruning_power())):.1%})"
+        )
+        return "\n".join(lines)
+
+
+def _all_concrete(q: Array, index: DTWIndex,
+                  exclude: Array | None) -> bool:
+    """Whether every search input is a concrete (host) value.
+
+    The one definition behind both host-only gates — the adaptive budget
+    estimate and the planner's calibrate-then-commit — so they always
+    defer under tracing together."""
+    return not (
+        isinstance(q, jax.core.Tracer)
+        or isinstance(index.series, jax.core.Tracer)
+        or isinstance(exclude, jax.core.Tracer)
+    )
+
+
+def _resolve_cascade(
+    q: Array,
+    index: DTWIndex,
+    cascade: CascadeConfig,
+    k: int,
+    exclude: Array | None,
+    plan: VerificationPlan,
+) -> CascadeConfig:
+    """Adaptive survivor budget: only on concrete (host) inputs — under
+    jit/shard_map tracing the static bucketed rule applies unchanged."""
+    if (
+        cascade.staged
+        and cascade.adaptive_budget
+        and cascade.survivor_budget is None
+        and plan.compaction.budget is None
+        and _all_concrete(q, index, exclude)
+    ):
+        budget = resolve_adaptive_budget(q, index, cascade, k, exclude)
+        return dataclasses.replace(cascade, survivor_budget=budget)
+    return cascade
 
 
 def nn_search(
@@ -118,7 +230,8 @@ def nn_search(
     *,
     exclude: Array | None = None,
     plan: VerificationPlan | None = None,
-) -> SearchResult:
+    with_stats: bool = False,
+):
     """Exact k-NN-DTW for a batch of queries.
 
     Args:
@@ -130,42 +243,138 @@ def nn_search(
       plan: verification plan (tier list + compaction policy + schedule);
         ``None`` uses ``pipeline.default_plan(cfg.cascade)``.  The
         distributed path passes a plan whose compaction ``limit_fn``
-        allocates the global survivor budget.
+        allocates the global survivor budget.  With ``cfg.auto_plan``
+        this is the *base* plan the calibration prices; the committed
+        optimised plan is what most blocks actually run.
+      with_stats: also return a ``SearchStats`` report (host-side only —
+        staged cascades on concrete inputs).  Returns ``(SearchResult,
+        SearchStats)`` instead of the bare result.
+
+    Calibrate-then-commit (``cfg.auto_plan``): a cold search runs its
+    first ``cfg.planner.calibrate_block`` queries under the base plan
+    with stats collection, the planner turns the measurement into a
+    committed plan (drop / reorder / limit-mask — search/planner.py), and
+    the rest of the batch plus every later search against this store and
+    config runs the committed plan.  Neighbours are bit-equal to the
+    base plan's by construction; only bound work changes.
     """
     q = jnp.asarray(queries, jnp.float32)
-    Q, L = q.shape
+    Q = q.shape[0]
     N = index.n
     k = min(cfg.k, N)
-    M = min(cfg.verify_chunk, N)
     cascade = cfg.cascade
-    w = cascade.w
-    dtw_fn = dtw_band_op if cascade.use_pallas else dtw_band_ref
-    qarange = jnp.arange(Q)
     if plan is None:
         # dense engines bound every pair with the all-pairs tier list; a
         # staged default would smuggle pairwise tiers into a path that has
         # no compaction to feed them (compute_bounds rejects that loudly)
         plan = default_plan(cascade) if cascade.staged \
             else dense_plan(cascade)
+    concrete = _all_concrete(q, index, exclude)
+    if with_stats and not (cascade.staged and concrete):
+        raise ValueError(
+            "with_stats is a host-side report over the staged tier "
+            "pipeline: it needs cascade.staged=True and concrete inputs"
+        )
 
-    # adaptive survivor budget: only on concrete (host) inputs — under
-    # jit/shard_map tracing the static bucketed rule applies unchanged
-    if (
-        cascade.staged
-        and cascade.adaptive_budget
-        and cascade.survivor_budget is None
-        and plan.compaction.budget is None
-        and not isinstance(q, jax.core.Tracer)
-        and not isinstance(index.series, jax.core.Tracer)
-        and not isinstance(exclude, jax.core.Tracer)
-    ):
-        budget = resolve_adaptive_budget(q, index, cascade, k, exclude)
-        cascade = dataclasses.replace(cascade, survivor_budget=budget)
+    pcfg = cfg.planner if cfg.planner is not None else PlannerConfig()
+    decision = None
+    stats = None
+    if cfg.auto_plan and cascade.staged and concrete and Q > 0:
+        decision = _planner.lookup_plan(index, cascade, k, plan, pcfg)
+        if decision is not None:
+            # committed: the whole batch runs the optimised plan
+            res, _ = _search(index, q, cfg, plan=decision.plan,
+                             exclude=exclude)
+            stats = decision.stats
+        else:
+            # calibrate: a strided query block runs the full base plan
+            # (its bound pass doubles as the measurement), the rest of
+            # the batch commits.  The stride keeps class-ordered batches
+            # honest — a contiguous prefix can miss whole classes and
+            # mis-price every tier (planner.calibration_sample).
+            pick = _planner.calibration_sample(Q, pcfg.calibrate_block)
+            rest = np.setdiff1d(np.arange(Q), pick)
+            qa = q[pick]
+            ex_a = None if exclude is None else exclude[pick]
+            cascade_a = _resolve_cascade(qa, index, cascade, k, ex_a, plan)
+            res_a, stats = _search(index, qa, cfg, plan=plan,
+                                   exclude=ex_a, cascade=cascade_a,
+                                   collect_stats=True)
+            decision = _planner.optimise_plan(
+                plan, stats, n=N, k=k,
+                base_budget=_planner.base_budget_for(
+                    index, cascade_a, k, plan),
+                pcfg=pcfg,
+            )
+            _planner.commit_plan(index, cascade, k, plan, decision, pcfg)
+            if rest.size:
+                ex_b = None if exclude is None else exclude[rest]
+                res_b, _ = _search(index, q[rest], cfg, plan=decision.plan,
+                                   exclude=ex_b)
+                inv = jnp.asarray(np.argsort(np.concatenate([pick, rest])))
+                res = SearchResult(
+                    dists=jnp.concatenate([res_a.dists, res_b.dists])[inv],
+                    idx=jnp.concatenate([res_a.idx, res_b.idx])[inv],
+                    n_dtw=jnp.concatenate([res_a.n_dtw, res_b.n_dtw])[inv],
+                    lb=jnp.concatenate([res_a.lb, res_b.lb])[inv],
+                )
+            else:
+                res = res_a
+        committed = decision.plan
+    else:
+        res, stats = _search(index, q, cfg, plan=plan, exclude=exclude,
+                             collect_stats=with_stats)
+        committed = plan
+    if not with_stats:
+        return res
+    report = SearchStats(
+        tiers=stats,
+        plan_tiers=tuple(t.name for t in committed.tiers),
+        schedule=committed.schedule,
+        dropped=decision.dropped if decision is not None else (),
+        budget=decision.budget if decision is not None else None,
+        limit=decision.limit if decision is not None else None,
+        calibrated=decision is not None,
+        n_dtw=res.n_dtw,
+        n=N,
+    )
+    return res, report
 
+
+def _search(
+    index: DTWIndex,
+    queries: Array,
+    cfg: EngineConfig,
+    *,
+    plan: VerificationPlan,
+    exclude: Array | None = None,
+    cascade: CascadeConfig | None = None,
+    collect_stats: bool = False,
+) -> tuple[SearchResult, TierStats | None]:
+    """One engine pass under one plan (the pre-planner ``nn_search`` body).
+
+    ``cascade`` is the budget-resolved config (``None`` resolves here);
+    ``collect_stats`` threads the instrumented executor through the bound
+    pass and returns its ``TierStats`` alongside the result.
+    """
+    q = jnp.asarray(queries, jnp.float32)
+    Q, L = q.shape
+    N = index.n
+    k = min(cfg.k, N)
+    M = min(cfg.verify_chunk, N)
+    if cascade is None:
+        cascade = _resolve_cascade(q, index, cfg.cascade, k, exclude, plan)
+    w = cascade.w
+    dtw_fn = dtw_band_op if cascade.use_pallas else dtw_band_ref
+    qarange = jnp.arange(Q)
+
+    tier_stats = None
     if cascade.staged:
         cres = run_plan(
-            q, index, cascade, plan, k=k, dtw_fn=dtw_fn, exclude=exclude
+            q, index, cascade, plan, k=k, dtw_fn=dtw_fn, exclude=exclude,
+            collect_stats=collect_stats,
         )
+        tier_stats = cres.stats
         lb = cres.lb
         # seeds are already verified: warm-start the top-k with them and
         # drop them from the unverified ordering
@@ -296,7 +505,8 @@ def nn_search(
         done0,
     )
     _, best_d, best_i, n_dtw, _, _ = lax.while_loop(cond, body, state)
-    return SearchResult(dists=best_d, idx=best_i, n_dtw=n_dtw, lb=lb)
+    return SearchResult(dists=best_d, idx=best_i, n_dtw=n_dtw, lb=lb), \
+        tier_stats
 
 
 def classify(

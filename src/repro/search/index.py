@@ -75,8 +75,25 @@ def build_index(
     labels: Array | None = None,
     *,
     normalize: bool = False,
+    calibrate: Any | None = None,
+    calibrate_sample: int = 8,
 ) -> DTWIndex:
-    """Build a ``DTWIndex`` for window ``w``."""
+    """Build a ``DTWIndex`` for window ``w``.
+
+    ``calibrate`` (an ``EngineConfig`` or ``CascadeConfig``) runs store-
+    level plan calibration at build time: a ``calibrate_sample``-series
+    sample of the store itself is searched leave-one-out through the
+    instrumented tier pipeline and the planner's optimised plan is
+    committed for this store/config (search/planner.py), so repeated-
+    query serving starts warm — the first real query batch runs the
+    committed plan instead of paying a calibration block.  The LOO
+    exclusion keeps the measured threshold honest (a self-match would
+    collapse ``tau`` to zero, the same argument as
+    ``choose_survivor_budget``), and a LOO-calibrated plan is
+    conservative for plain queries, so the committed decision serves
+    both.  Calibration requires concrete (host) inputs; it is skipped
+    for unstaged cascades.
+    """
     series = jnp.asarray(series, jnp.float32)
     if normalize:
         series = znorm(series)
@@ -84,7 +101,7 @@ def build_index(
         labels = jnp.full((series.shape[0],), -1, jnp.int32)
     u, lo = envelope_op(series, w)
     kim, kim_ok = kim_features(series)
-    return DTWIndex(
+    index = DTWIndex(
         series=series,
         labels=jnp.asarray(labels, jnp.int32),
         upper=u,
@@ -93,3 +110,18 @@ def build_index(
         kim_ok=kim_ok,
         w=w,
     )
+    if calibrate is not None:
+        from repro.search.planner import calibrate_plan, calibration_sample
+
+        cascade = getattr(calibrate, "cascade", calibrate)
+        k = int(getattr(calibrate, "k", 1))
+        if cascade.staged and not isinstance(series, jax.core.Tracer):
+            # strided store sample: class-ordered stores get every class
+            # into the measurement (planner.calibration_sample)
+            pick = calibration_sample(index.n, calibrate_sample)
+            calibrate_plan(
+                index.series[pick], index, cascade, k,
+                exclude=jnp.asarray(pick, jnp.int32), sample=len(pick),
+                pcfg=getattr(calibrate, "planner", None),
+            )
+    return index

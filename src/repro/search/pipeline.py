@@ -34,7 +34,11 @@ is running):
     per-query ``n_dtw`` are invariant under it.
 
 Registering a custom tier (worked example — this exact pattern is
-exercised by tests/test_scheduler.py):
+exercised by tests/test_scheduler.py and tests/test_planner.py).  A
+registered tier is not just runnable, it is *priced*: the executor can
+measure its realised pruning mass against its cost class (``TierStats``
+below), and the planner (search/planner.py) drops it from the committed
+plan when the measurement says it does not pay — no hand-tuning:
 
     from repro.search import pipeline as pl
 
@@ -52,11 +56,28 @@ exercised by tests/test_scheduler.py):
     plan = dataclasses.replace(
         plan, tiers=(pl.get_tier("kim"), pl.get_tier("bands_v2"),
                      *plan.tiers[1:]))
-    nn_search(index, queries, ecfg, plan=plan)   # exactness is untouched
+    ecfg = EngineConfig(cascade=cfg, k=1, auto_plan=True)
+    res, stats = nn_search(index, queries, ecfg, plan=plan,
+                           with_stats=True)      # exactness is untouched
+    print(stats.table())
+    # tier        cost    scored   mass  mass%   work  mass/work
+    # kim         O(1)      3072    410  13.3%   3.1e3  1.3e-1
+    # bands_v2    O(V^2)    3072      0   0.0%   1.2e4  0.0      <- dropped
+    # bands       O(V^2)    3072   2231  72.6%   4.9e4  4.5e-2
+    # ...
+    # committed: kim -> bands -> enhanced_pairwise   dropped: bands_v2
+
+The V=2 pass here is fully shadowed by the V=4 pass that runs after it,
+so its measured incremental mass is zero and the committed plan stops
+paying for it from the second query block on.  ``list_tiers()`` /
+``unregister_tier()`` keep calibration experiments from leaking registry
+state across tests.
 
 Every tier must return a valid lower bound on ``DTW_w``; the executor
 (cascade.run_plan) keeps the running elementwise max, so a loose custom
-tier can only cost work, never correctness.
+tier can only cost work, never correctness — and the planner can only
+*remove* tier work, so a committed plan inherits exactness from the same
+argument.
 """
 
 from __future__ import annotations
@@ -79,9 +100,15 @@ class BoundTier:
     """One composable bound stage of the cascade.
 
     Attributes:
-      name: stable identifier (registry key, bench label).
-      cost: cost class per pair — documentation and bench labelling only
-        ("O(1)", "O(V^2)", "O(L)"); the executor does not interpret it.
+      name: stable identifier (registry key, bench label; the planner
+        keys its drop/reorder decisions by name, so tiers sharing a plan
+        must have distinct names).
+      cost: cost class per pair ("O(1)", "O(V)", "O(V^2)", "O(L)",
+        "O(L*W)").  Since the planner, this is *priced*, not just
+        documentation: ``tier_cost_weight`` turns it into the work
+        denominator of the mass/cost ratio the plan optimiser gates on,
+        and unrecognised spellings price at ``O(L)`` — declare a known
+        class or expect dense-tier pricing.
       scope: ``"all_pairs"`` (fn maps ``(q, index, cfg) -> (Q, N)`` bounds)
         or ``"pairwise"`` (fn maps packed rows
         ``(qrows, crows, urows, lrows, cfg) -> (P,)`` bounds over the
@@ -193,6 +220,116 @@ class VerificationPlan:
 
 
 # ---------------------------------------------------------------------------
+# tier pricing: measured mass / cost-weighted work
+# ---------------------------------------------------------------------------
+
+
+def bucket_pow2(x: int, floor: int) -> int:
+    """Round ``x`` up to the next power-of-two bucket (>= ``floor``) —
+    the one bucketing rule behind both the cascade's survivor budgets
+    (floor 64, see cascade.py) and the planner's committed right-sizing
+    (floor 8): bounded bucket vocabulary = bounded recompilation."""
+    b = floor
+    while b < x:
+        b <<= 1
+    return b
+
+
+def tier_cost_weight(cost: str, L: int, v: int, w: int) -> float:
+    """Per-pair work weight of a tier's declared cost class.
+
+    The cost class strings were documentation until now; the planner
+    prices tiers with them, so the executor turns them into per-pair
+    weights here (one definition for stats, planner, and bench).
+    Unrecognised classes price at ``O(L)`` — the costliest *built-in*
+    class — which under-charges anything genuinely ``O(L*W)``-shaped, so
+    a custom tier above ``O(L)`` should declare one of the recognised
+    spellings to be priced (and gated) honestly.
+    """
+    key = cost.replace(" ", "").upper()
+    if key == "O(1)":
+        return 1.0
+    if key == "O(V)":
+        return float(max(v, 1))
+    if key in ("O(V^2)", "O(V2)", "O(V*V)"):
+        return float(max(v, 1)) ** 2
+    if key == "O(L)":
+        return float(max(L, 1))
+    if key in ("O(L*W)", "O(LW)", "O(W*L)", "O(WL)"):
+        return float(max(L, 1)) * float(max(min(w, L), 1))
+    return float(max(L, 1))
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class TierStats:
+    """Measured per-tier pruning mass + cost-weighted work for one plan.
+
+    This generalises what ``choose_survivor_budget`` estimates (survivor
+    mass under a verified threshold) into a reusable per-tier accumulator:
+    ``cascade.run_plan(collect_stats=True)`` fills one of these while
+    executing a plan, pricing every tier against the seed-verified
+    threshold ``tau`` (the k-th seed distance upper-bounds the final k-th
+    best, so a pair whose running bound reaches ``tau`` is realised
+    pruning — the paper's pruning-power numerator, attributed to the tier
+    that crossed it).  All measured fields are arrays, so the struct is a
+    pytree: it traces through ``jit``/``shard_map`` and the distributed
+    path can ``psum`` it across shards before anyone syncs to host
+    (search/distributed.py ``gather_tier_stats``).
+
+    Attributes:
+      names/costs/scopes: static per-tier labels, in plan order.
+      mass: (T,) incremental realised pruning mass — pairs whose running
+        bound first reached ``tau`` at this tier.
+      scored: (T,) pairs the tier actually scored (pairwise tiers under a
+        refine limit score only their live slots).
+      work: (T,) ``scored * tier_cost_weight(cost)`` — the cost-weighted
+        denominator of the planner's mass/cost ratio.
+      pairs: () total measured (query, candidate) pairs (excluded
+        candidates removed).
+      queries: () measured query count.
+      survivors: (Q,) per-query cheap-tier survivor mass at ``tau`` —
+        ``choose_survivor_budget``'s estimator, kept per query so the
+        planner can bucket a refine limit from it.
+    """
+
+    names: tuple[str, ...] = dataclasses.field(metadata=dict(static=True))
+    costs: tuple[str, ...] = dataclasses.field(metadata=dict(static=True))
+    scopes: tuple[str, ...] = dataclasses.field(metadata=dict(static=True))
+    mass: Array
+    scored: Array
+    work: Array
+    pairs: Array
+    queries: Array
+    survivors: Array
+
+    def mass_per_work(self):
+        """(T,) realised mass per unit of cost-weighted work (host-side)."""
+        import numpy as np
+
+        w = np.maximum(np.asarray(self.work, dtype=float), 1e-30)
+        return np.asarray(self.mass, dtype=float) / w
+
+    def table(self) -> str:
+        """Human-readable per-tier pricing table (host-side)."""
+        import numpy as np
+
+        pairs = max(float(self.pairs), 1.0)
+        ratio = self.mass_per_work()
+        rows = [f"{'tier':<20} {'cost':<8} {'scored':>9} {'mass':>9} "
+                f"{'mass%':>7} {'work':>10} {'mass/work':>10}"]
+        for i, name in enumerate(self.names):
+            m = float(np.asarray(self.mass)[i])
+            s = float(np.asarray(self.scored)[i])
+            wk = float(np.asarray(self.work)[i])
+            rows.append(
+                f"{name:<20} {self.costs[i]:<8} {s:>9.0f} {m:>9.0f} "
+                f"{100.0 * m / pairs:>6.1f}% {wk:>10.3g} {ratio[i]:>10.3g}"
+            )
+        return "\n".join(rows)
+
+
+# ---------------------------------------------------------------------------
 # tier registry + the built-in tiers
 # ---------------------------------------------------------------------------
 
@@ -218,8 +355,29 @@ def get_tier(name: str) -> BoundTier:
         ) from None
 
 
-def registered_tiers() -> tuple[str, ...]:
+def list_tiers() -> tuple[str, ...]:
+    """Sorted names of every registered tier factory.
+
+    The listing half of the registry's bookkeeping pair (with
+    ``unregister_tier``): calibration experiments that register throwaway
+    tiers can enumerate and remove exactly what they added instead of
+    leaking registry state across tests.
+    """
     return tuple(sorted(_TIER_REGISTRY))
+
+
+def registered_tiers() -> tuple[str, ...]:
+    """Alias of ``list_tiers`` (the pre-planner name, kept for callers)."""
+    return list_tiers()
+
+
+def unregister_tier(name: str) -> bool:
+    """Remove a registered tier factory; ``True`` if it was present.
+
+    Idempotent: unregistering a name twice (or a name never registered)
+    is a no-op returning ``False``, so test teardown never races.
+    """
+    return _TIER_REGISTRY.pop(name, None) is not None
 
 
 @register_tier("kim")

@@ -1,0 +1,455 @@
+"""Self-tuning tier planner: measured mass/cost plan optimisation.
+
+The paper's central trade-off — every lower bound buys pruning mass at a
+compute cost, and the right mix shifts with the window and the data — was
+hand-tuned until now: ``VerificationPlan`` tiers are declarative but
+statically ordered, so a plan that pays at ``w = 0.1 L`` wastes a full
+pairwise pass at ``w = L`` where the bands-tier mass collapses.  This
+module closes the loop, executing Herrmann & Webb's "order bounds by
+expected value" argument (arXiv:2102.05221) at *plan* level and Lemire's
+two-pass gating (arXiv:0811.3301) as a measured decision instead of a
+convention:
+
+  1. **measure** — the instrumented executor
+     (``cascade.run_plan(collect_stats=True)``) prices every tier of a
+     plan on real queries: incremental realised pruning mass at the
+     seed-verified threshold ``tau``, pairs scored, and cost-class-
+     weighted work (``pipeline.TierStats``);
+  2. **decide** — ``optimise_plan`` rewrites the plan from the
+     measurement: tiers whose realised mass is a negligible fraction of
+     the measured pairs are **dropped** (dropping only loosens bounds, so
+     exactness is inherited from the running-max argument); surviving
+     tiers are **reordered** by mass-per-work (running max is
+     commutative, so this is attribution/future-gating order, never
+     semantics); and the compaction is **limit-masked** — the budget
+     shrinks to a bucketed cap of the measured per-query survivor mass
+     and a constant refine limit masks the residual slots, which the
+     per-slot liveness kernels (PR 4) turn into genuinely skipped work;
+  3. **commit** — the decision is cached per (store identity, window, k,
+     config, base-plan shape), so ``engine.nn_search``'s calibrate-then-
+     commit flow pays measurement once and every later block (or a whole
+     serving process, via ``build_index(calibrate=...)``) runs the
+     optimised plan.
+
+Every decision is *bucketed* like the adaptive survivor budget — budgets
+are power-of-two buckets, refine limits are sublane (8) multiples — so
+the committed plan is static data and the executor stays jit/shard_map-
+traceable with O(log N) distinct shapes.
+
+Exactness: a planner-emitted plan can only *remove* bound work — drop a
+tier, skip refinement of packed slots whose cheap bound already exceeds
+``tau`` — and unrefined pairs keep a valid (looser) lower bound, so the
+engine's verified neighbours are bit-equal to the default plan's by the
+same argument that makes any plan exact.  The limit cap is chosen with
+headroom over the measured survivor mass (``limit_safety``, then bucket
+rounding), so on the calibration distribution the masked slots are
+exactly the pairs the engine could never verify — measured, not assumed
+(property-tested in tests/test_planner.py across windows and skewed
+stores).
+
+The distributed path reuses this machinery unchanged: each shard runs the
+instrumented executor locally, ``TierStats`` is a pytree so the shard
+measurements are ``psum``-merged over the mesh axes (the same gather
+pattern as ``global_budget_limit_fn``), and every shard derives the same
+decision from the same global stats — one committed plan for the fleet
+(search/distributed.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+import weakref
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.tiling import round_up
+from repro.search.pipeline import (
+    Compaction,
+    TierStats,
+    VerificationPlan,
+    bucket_pow2,
+    default_plan,
+)
+
+Array = jax.Array
+
+# planner buckets: budgets snap to powers of two (pipeline.bucket_pow2,
+# the cascade's rule at floor 8 — the planner only ever *shrinks* the
+# cascade's 64-floor buckets, and the pair-tile sublane floor is 8),
+# refine limits to sublane multiples of 8.  Bounded decision vocabulary
+# = bounded recompilation, same argument as the adaptive budget's rule.
+_BUCKET_FLOOR = 8
+
+
+@dataclasses.dataclass(frozen=True)
+class PlannerConfig:
+    """Decision thresholds for ``optimise_plan``.
+
+    Attributes:
+      drop_mass_frac: drop a tier whose incremental realised pruning mass
+        is <= this fraction of the measured pairs.  The default ``0.0``
+        is the *conservative* profile: only measured-idle tiers — zero
+        crossings on the calibration block — are removed.  The
+        measurement is taken at the seed threshold ``tau``, so this is a
+        strong empirical signal, not a proof: a zero-mass tier can in
+        principle still order below-``tau`` bounds that the engine's
+        stopping rule reads, so the "committed n_dtw never exceeds the
+        base plan's" property is what the calibration-representative
+        workloads in tests/test_planner.py pin, not a theorem (an
+        all-zero measurement is additionally rejected outright — see
+        ``optimise_plan``).  A positive value is the *expected-value*
+        profile (Herrmann & Webb's ordering argument taken to its
+        conclusion): a tier whose mass is a negligible fraction of the
+        measured pairs is dropped even though it pruned a little,
+        trading a bounded handful of extra DTW verifications for the
+        whole tier's cost class — exactness is untouched either way.
+      limit_safety: headroom multiplier on the measured per-query survivor
+        mass before bucketing the refine limit/budget (the power-of-two
+        bucket rounding then adds 0-100% more, so the committed width
+        carries at least ~30% slack over the measured maximum —
+        ``choose_survivor_budget``'s safety philosophy at plan level).
+      limit_slack: only attach a refine-limit mask when the capped limit
+        is <= this fraction of the committed budget — masking a sliver of
+        the packed width is bookkeeping, not savings.
+      reorder: reorder surviving tiers by measured mass-per-work
+        (descending).  Running max is commutative, so this is measurement
+        attribution and future gating order only.
+      calibrate_block: queries in the engine's calibration block (the
+        first block of a cold ``nn_search`` runs the base plan to populate
+        stats; the rest of the batch commits).
+    """
+
+    drop_mass_frac: float = 0.0
+    limit_safety: float = 1.3
+    limit_slack: float = 0.75
+    reorder: bool = True
+    calibrate_block: int = 8
+
+
+@dataclasses.dataclass(frozen=True)
+class PlanDecision:
+    """One committed plan rewrite plus the measurement that justified it.
+
+    Attributes:
+      plan: the validated optimised ``VerificationPlan`` to commit.
+      base: the plan the measurement priced.
+      stats: the host-side ``TierStats`` the decision was derived from.
+      dropped: names of tiers removed from the base plan.
+      order: committed tier names, in committed order.
+      budget: committed compaction budget bucket (``None`` = base left
+        untouched).
+      limit: committed constant refine limit (``None`` = no mask).
+    """
+
+    plan: VerificationPlan
+    base: VerificationPlan
+    stats: TierStats
+    dropped: tuple[str, ...]
+    order: tuple[str, ...]
+    budget: int | None
+    limit: int | None
+
+    def summary(self) -> str:
+        parts = [" -> ".join(self.order) if self.order else "<no tiers>"]
+        if self.dropped:
+            parts.append(f"dropped: {', '.join(self.dropped)}")
+        if self.budget is not None:
+            parts.append(f"budget={self.budget}")
+        if self.limit is not None:
+            parts.append(f"limit={self.limit}")
+        return "   ".join(parts)
+
+
+def _host_stats(stats: TierStats) -> TierStats:
+    """Sync a (possibly traced-then-computed) TierStats to host numpy."""
+    return dataclasses.replace(
+        stats,
+        mass=np.asarray(stats.mass, dtype=np.float64),
+        scored=np.asarray(stats.scored, dtype=np.float64),
+        work=np.asarray(stats.work, dtype=np.float64),
+        pairs=float(np.asarray(stats.pairs)),
+        queries=float(np.asarray(stats.queries)),
+        survivors=np.asarray(stats.survivors, dtype=np.float64),
+    )
+
+
+def optimise_plan(
+    base: VerificationPlan,
+    stats: TierStats,
+    *,
+    n: int,
+    k: int,
+    base_budget: int,
+    pcfg: PlannerConfig | None = None,
+) -> PlanDecision:
+    """Rewrite ``base`` from its measured ``TierStats`` (module docstring).
+
+    ``n`` is the (per-shard) store size the committed budget is clamped
+    to; ``base_budget`` is the packed width the base plan would have used
+    (explicit compaction budget, adaptive bucket, or the static rule) —
+    the planner only ever shrinks it.  Returns a ``PlanDecision`` whose
+    plan is validated by construction (``VerificationPlan.__post_init__``
+    runs on it).
+    """
+    pcfg = pcfg if pcfg is not None else PlannerConfig()
+    st = _host_stats(stats)
+    names = tuple(t.name for t in base.tiers)
+    if len(set(names)) != len(names):
+        # the executor tolerates duplicate names (it runs fns, not
+        # names), but every planner decision — attribution, drops, the
+        # commit-cache signature — is keyed by name, so a duplicate
+        # would silently rewrite the wrong tier
+        raise ValueError(
+            f"duplicate tier names in plan {names!r}: the planner keys "
+            "decisions by name; give each tier a distinct one"
+        )
+    by_name = {t.name: t for t in base.tiers}
+    if tuple(st.names) != names:
+        raise ValueError(
+            f"stats tiers {st.names!r} do not match plan tiers "
+            f"{names!r}; price the plan you are optimising"
+        )
+
+    pairs = max(st.pairs, 1.0)
+    ratio = st.mass_per_work()
+    if not np.any(np.asarray(st.mass) > 0):
+        # Degenerate measurement: no tier crossed the threshold anywhere.
+        # Either the bounds are genuinely useless on this workload (w = L
+        # on incompressible data) or the threshold itself collapsed
+        # (tau = 0 — e.g. a store with duplicate series under LOO
+        # calibration, where every sampled query's twin verifies at
+        # distance zero and ``prev < tau`` can never fire).  A zero
+        # measurement cannot distinguish the two, and acting on it would
+        # drop *every* tier and shrink the budget to the floor — so the
+        # only safe commit is the base plan unchanged.
+        return PlanDecision(
+            plan=base, base=base, stats=st, dropped=(),
+            order=tuple(t.name for t in base.tiers),
+            budget=None, limit=None,
+        )
+    keep, dropped = [], []
+    for i, name in enumerate(st.names):
+        if st.mass[i] <= pcfg.drop_mass_frac * pairs:
+            dropped.append(name)
+        else:
+            keep.append((i, name))
+    # a surviving pairwise tier needs a surviving all_pairs tier: the
+    # compaction selects survivors by the all-pairs running max, and an
+    # all-zero selection key would pack an arbitrary, query-independent
+    # candidate set — keep the best-measured cheap tier as the key even
+    # when its own crossings were zero
+    if (
+        any(st.scopes[i] == "pairwise" for i, _ in keep)
+        and not any(st.scopes[i] == "all_pairs" for i, _ in keep)
+    ):
+        ap = [i for i, s in enumerate(st.scopes) if s == "all_pairs"]
+        if ap:
+            best = max(ap, key=lambda i: (st.mass[i], ratio[i], -i))
+            keep.append((best, st.names[best]))
+            dropped.remove(st.names[best])
+    if pcfg.reorder:
+        # Herrmann & Webb's expected-value order at plan level: highest
+        # measured mass-per-work first, within each scope (the single
+        # compaction point keeps all_pairs tiers ahead of pairwise ones)
+        keep.sort(key=lambda it: (st.scopes[it[0]] == "pairwise",
+                                  -ratio[it[0]], it[0]))
+    else:
+        keep.sort(key=lambda it: it[0])     # base plan order stays valid
+    tiers = tuple(by_name[name] for _, name in keep)
+
+    comp = base.compaction
+    budget = limit = None
+    if any(t.scope == "pairwise" for t in tiers):
+        smax = float(np.max(st.survivors)) if np.size(st.survivors) else 0.0
+        cap = max(int(math.ceil(smax * pcfg.limit_safety)), 4 * k,
+                  _BUCKET_FLOOR)
+        budget = min(base_budget, bucket_pow2(cap, _BUCKET_FLOOR), n)
+        limit_c = min(round_up(cap, 8), budget)   # sublane-rounded limit
+        new_comp = dataclasses.replace(comp, budget=budget)
+        if comp.limit_fn is not None:
+            # compose with the existing policy (the distributed global
+            # budget): both only shrink refinement, min is still valid
+            prev_fn = comp.limit_fn
+            new_comp = dataclasses.replace(
+                new_comp,
+                limit_fn=_compose_limit(prev_fn, limit_c),
+            )
+            limit = limit_c
+        elif limit_c <= pcfg.limit_slack * budget:
+            new_comp = dataclasses.replace(
+                new_comp, limit_fn=_const_limit(limit_c), width_scale=1
+            )
+            limit = limit_c
+        comp = new_comp
+    plan = dataclasses.replace(base, tiers=tiers, compaction=comp)
+    return PlanDecision(
+        plan=plan,
+        base=base,
+        stats=st,
+        dropped=tuple(dropped),
+        order=tuple(t.name for t in tiers),
+        budget=budget,
+        limit=limit,
+    )
+
+
+def calibration_sample(n: int, sample: int) -> np.ndarray:
+    """Strided host-side calibration indices (sorted, unique).
+
+    A *contiguous* first block is an adversarial sample on class-ordered
+    data (the UCR convention): the measured mass and survivor counts then
+    describe only the leading classes, and the committed plan under-
+    covers the rest.  A stride across the full range puts every region of
+    the batch/store in the measurement for the same sample size.
+    """
+    s = max(1, min(sample, n))
+    return np.unique(np.round(np.linspace(0, n - 1, s)).astype(np.int64))
+
+
+def _const_limit(limit: int) -> Callable:
+    def limit_fn(lb01, budget, k):
+        return jnp.full((lb01.shape[0],), limit, jnp.int32)
+
+    return limit_fn
+
+
+def _compose_limit(prev_fn: Callable, limit: int) -> Callable:
+    def limit_fn(lb01, budget, k):
+        return jnp.minimum(
+            prev_fn(lb01, budget, k), jnp.int32(limit)
+        ).astype(jnp.int32)
+
+    return limit_fn
+
+
+# ---------------------------------------------------------------------------
+# commit cache: one measured decision per (store, window, k, config, plan)
+# ---------------------------------------------------------------------------
+
+# Mirrors pipeline's adaptive-budget memo: entries hold a weakref to the
+# store's series array and hit only while that exact array is alive.  The
+# key deliberately has no leave-one-out flag — a plan calibrated with LOO
+# exclusion is *conservative* for plain serving (excluding the self-match
+# raises tau, which raises the measured survivor mass and the committed
+# limit), so build-time LOO calibration warms ordinary queries too.
+_PLAN_CACHE: dict = {}
+_PLAN_CACHE_MAX = 64
+
+
+def _plan_sig(plan: VerificationPlan) -> tuple:
+    comp = plan.compaction
+    return (
+        tuple(t.name for t in plan.tiers),
+        plan.schedule,
+        plan.verify_tile_p,
+        comp.budget,
+        comp.width_scale,
+        # the callback object itself (hashed by identity): two plans
+        # differing only in their limit policy are different decisions,
+        # and the strong reference in the key prevents id reuse
+        comp.limit_fn,
+    )
+
+
+def _plan_cache_key(index, cascade, k: int, base: VerificationPlan,
+                    pcfg: PlannerConfig | None) -> tuple:
+    pcfg = pcfg if pcfg is not None else PlannerConfig()
+    return (
+        id(index.series),
+        index.n,
+        cascade.w,
+        k,
+        cascade.v,
+        cascade.use_kim,
+        cascade.use_pallas,
+        cascade.survivor_budget,
+        _plan_sig(base),
+        dataclasses.astuple(pcfg),    # thresholds change the decision
+    )
+
+
+def plan_cache_clear() -> None:
+    _PLAN_CACHE.clear()
+
+
+def plan_cache_len() -> int:
+    return len(_PLAN_CACHE)
+
+
+def lookup_plan(index, cascade, k: int, base: VerificationPlan,
+                pcfg: PlannerConfig | None = None) -> PlanDecision | None:
+    """Committed decision for this (store, config, base plan, planner
+    thresholds), if alive."""
+    hit = _PLAN_CACHE.get(_plan_cache_key(index, cascade, k, base, pcfg))
+    if hit is not None and hit[0]() is index.series:
+        return hit[1]
+    return None
+
+
+def commit_plan(index, cascade, k: int, base: VerificationPlan,
+                decision: PlanDecision,
+                pcfg: PlannerConfig | None = None) -> PlanDecision:
+    """Cache a decision so later searches start from the committed plan."""
+    if len(_PLAN_CACHE) >= _PLAN_CACHE_MAX:
+        _PLAN_CACHE.clear()
+    key = _plan_cache_key(index, cascade, k, base, pcfg)
+    _PLAN_CACHE[key] = (weakref.ref(index.series), decision)
+    return decision
+
+
+def base_budget_for(index, cascade, k: int, base: VerificationPlan) -> int:
+    """The packed width the base plan would refine — what the planner is
+    allowed to shrink."""
+    if base.compaction.budget is not None:
+        return max(1, min(index.n, base.compaction.budget))
+    return cascade.budget(index.n, k)
+
+
+def calibrate_plan(
+    q: Array,
+    index,
+    cascade,
+    k: int = 1,
+    *,
+    plan: VerificationPlan | None = None,
+    exclude: Array | None = None,
+    sample: int = 8,
+    pcfg: PlannerConfig | None = None,
+) -> PlanDecision:
+    """Measure-decide-commit in one host-side call.
+
+    Runs the instrumented executor on a ``sample``-query block, prices the
+    (given or default) base plan, and commits the optimised plan for this
+    (store, config) — the standalone entry the index build-time
+    calibration and the benches use; ``engine.nn_search`` reaches the same
+    commit through its first-block search instead, so serving pays no
+    extra bound pass.  Concrete (host) inputs only, like
+    ``choose_survivor_budget``.
+    """
+    from repro.search.cascade import run_plan
+    from repro.search.pipeline import resolve_adaptive_budget
+
+    base = plan if plan is not None else default_plan(cascade)
+    q = jnp.asarray(q, jnp.float32)
+    pick = calibration_sample(q.shape[0], sample)
+    qs = q[pick]
+    ex = None if exclude is None else jnp.asarray(exclude)[pick]
+    cascade_r = cascade
+    if (
+        cascade.adaptive_budget
+        and cascade.survivor_budget is None
+        and base.compaction.budget is None
+    ):
+        budget = resolve_adaptive_budget(qs, index, cascade, k, ex)
+        cascade_r = dataclasses.replace(cascade, survivor_budget=budget)
+    cres = run_plan(qs, index, cascade_r, base, k=k, exclude=ex,
+                    collect_stats=True)
+    decision = optimise_plan(
+        base, cres.stats, n=index.n, k=k,
+        base_budget=base_budget_for(index, cascade_r, k, base), pcfg=pcfg,
+    )
+    return commit_plan(index, cascade, k, base, decision, pcfg)

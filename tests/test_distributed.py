@@ -97,6 +97,54 @@ print("OK", limits.mean(axis=1))
 """)
 
 
+def test_distributed_calibrated_plan_exact_and_committed():
+    """Distributed calibrate-then-commit: the shard-local TierStats are
+    psum/pmax-merged over the mesh, the host derives one global plan, and
+    the committed step stays exact vs single-device brute force on a
+    skewed store — with the planner's refine limit composed into the
+    global-budget allocation."""
+    _run("""
+import numpy as np, jax, jax.numpy as jnp
+from repro.data import make_dataset
+from repro.search import (build_index, brute_force, EngineConfig, CascadeConfig,
+                          make_distributed_search, shard_index,
+                          calibrate_distributed_plan)
+from repro.launch.mesh import make_host_mesh
+mesh = make_host_mesh((4, 2), ("data", "model"))
+rng = np.random.default_rng(7)
+Q, L, N, w, k = 8, 64, 128, 12, 2
+queries = rng.normal(size=(Q, L)).astype(np.float32)
+near = np.repeat(queries, 4, axis=0) + 0.05 * rng.normal(size=(Q*4, L)).astype(np.float32)
+far = 5.0 + rng.normal(size=(N - Q*4, L)).astype(np.float32)
+series = np.concatenate([near, far], axis=0).astype(np.float32)
+idx = build_index(series, w)
+cfg = EngineConfig(cascade=CascadeConfig(w=w, v=4, candidate_chunk=32,
+                                         use_pallas=False, survivor_budget=8),
+                   verify_chunk=8, k=k)
+sidx = shard_index(mesh, idx, ("data",))
+qj = jnp.asarray(queries)
+dec = calibrate_distributed_plan(
+    mesh, cfg, sidx.series, sidx.labels, sidx.upper, sidx.lower,
+    sidx.kim, sidx.kim_ok, qj, data_axes=("data",), query_axis="model")
+# the calibrated compaction still carries the global-budget policy
+assert dec.plan.compaction.limit_fn is not None, "lost the global budget"
+step = make_distributed_search(mesh, cfg, data_axes=("data",),
+                               query_axis="model", plan=dec.plan)
+d, i, ndtw = step(sidx.series, sidx.labels, sidx.upper, sidx.lower,
+                  sidx.kim, sidx.kim_ok, qj)
+bd, _ = brute_force(idx, queries, w, k=k, use_pallas=False)
+assert np.allclose(np.array(d), np.array(bd), rtol=1e-4), "calibrated plan != brute force"
+# the default-plan step on the same store: the committed plan may not
+# verify more (conservative profile: only measured-idle work was cut)
+step0 = make_distributed_search(mesh, cfg, data_axes=("data",),
+                                query_axis="model")
+d0, i0, ndtw0 = step0(sidx.series, sidx.labels, sidx.upper, sidx.lower,
+                      sidx.kim, sidx.kim_ok, qj)
+assert np.all(np.array(ndtw) <= np.array(ndtw0)), (np.array(ndtw), np.array(ndtw0))
+print("OK", dec.summary())
+""")
+
+
 @pytest.mark.xfail(
     strict=True,
     reason=(

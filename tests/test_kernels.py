@@ -113,6 +113,54 @@ def test_lb_enhanced_pairwise_live_slots(rng, P, L, w, v, bands_only):
     assert dead.shape == (P,) and np.all(np.array(dead) == -np.inf)
 
 
+@pytest.mark.parametrize("Q,C,L,w,v", [(9, 130, 64, 20, 2), (3, 5, 32, 6, 4),
+                                       (8, 128, 100, 10, 1)])
+@pytest.mark.parametrize("bands_only", [False, True])
+def test_lb_enhanced_cross_block_live_candidates(rng, Q, C, L, w, v,
+                                                 bands_only):
+    """Liveness parity for the dense cross-block tier (the pairwise
+    kernel's PR 4 contract): dead candidates emit -inf down their whole
+    output column (the running-max identity), live columns are bit-equal
+    to the unmasked kernel, and an all-dead store — whole skipped
+    candidate tiles — still emits the right shape of -inf."""
+    q = jnp.array(rng.normal(size=(Q, L)).astype(np.float32))
+    c = jnp.array(rng.normal(size=(C, L)).astype(np.float32))
+    u, lo = ops.envelope_op(c, w)
+    live = jnp.array(rng.integers(0, 2, size=(C,)).astype(np.int32))
+    got = ops.lb_enhanced_op(q, c, u, lo, w, v, live=live,
+                             bands_only=bands_only)
+    want = ref.lb_enhanced_ref(q, c, u, lo, w, v, live=live,
+                               bands_only=bands_only)
+    np.testing.assert_allclose(np.array(got), np.array(want),
+                               rtol=1e-4, atol=1e-5)
+    full = ops.lb_enhanced_op(q, c, u, lo, w, v, bands_only=bands_only)
+    lv = np.array(live).astype(bool)
+    np.testing.assert_array_equal(np.array(got)[:, lv],
+                                  np.array(full)[:, lv])
+    assert np.all(np.array(got)[:, ~lv] == -np.inf)
+    dead = ops.lb_enhanced_op(q, c, u, lo, w, v,
+                              live=jnp.zeros((C,), jnp.int32),
+                              bands_only=bands_only)
+    assert dead.shape == (Q, C) and np.all(np.array(dead) == -np.inf)
+
+
+def test_enhanced_all_pairs_live_mask(rng):
+    """The dense tier's bound fn threads the candidate mask through its
+    chunked kernel calls (the planner's dense limit-mask lever)."""
+    from repro.search import CascadeConfig, build_index, enhanced_all_pairs
+    Q, C, L, w = 5, 37, 33, 8
+    q = jnp.array(rng.normal(size=(Q, L)).astype(np.float32))
+    c = jnp.array(rng.normal(size=(C, L)).astype(np.float32))
+    idx = build_index(c, w)
+    cfg = CascadeConfig(w=w, v=4, candidate_chunk=16)
+    live = jnp.array(rng.integers(0, 2, size=(C,)).astype(np.int32))
+    got = np.array(enhanced_all_pairs(q, idx, cfg, live=live))
+    want = np.array(enhanced_all_pairs(q, idx, cfg))
+    lv = np.array(live).astype(bool)
+    np.testing.assert_array_equal(got[:, lv], want[:, lv])
+    assert np.all(got[:, ~lv] == -np.inf)
+
+
 def test_lb_enhanced_pairwise_tile_sweep(rng):
     """VMEM tile shrink: any pair-tile size gives identical bounds."""
     from repro.kernels.lb_enhanced_pairwise import lb_enhanced_pairwise_pallas
