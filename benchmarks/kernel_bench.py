@@ -453,6 +453,85 @@ def _plan_records() -> list[dict]:
     return recs
 
 
+def _guard_records() -> list[dict]:
+    """Price the default-on exactness guards (search/guards.py).
+
+    ``guard_overhead_L256_w{26,77}_frac`` is the fractional wall-clock
+    cost of the guard ops on the jitted *bound pass* (``run_plan``:
+    tiers + compaction + seed verification — where the finite gates,
+    conservation distinct-count and admissibility spot-check live), on
+    the planner rows' serving-shaped workload (L=256, N=192, Q=16).
+    Sampled paired like the planner rows, committed as the median of
+    per-pair ``t_on / t_off - 1``.  The guarded side returns the guard
+    vector alongside the bounds so XLA cannot dead-code-eliminate the
+    checks.  CI fails if any ``guard_overhead_*_frac`` exceeds 0.05 —
+    the guards stay default-on only while they are effectively free.
+    """
+    import time as _time
+
+    import jax
+
+    from repro.search import (
+        CascadeConfig,
+        GuardConfig,
+        build_index,
+        default_plan,
+        run_plan,
+    )
+
+    recs = []
+    Q, L = _SCHED_Q, _SCHED_L
+    k = 1
+    rng = np.random.default_rng(11)
+    queries = rng.normal(size=(Q, L)).astype(np.float32)
+    near = queries + 0.05 * rng.normal(size=(Q, L)).astype(np.float32)
+    far = 5.0 + rng.normal(size=(176, L)).astype(np.float32)
+    series = np.concatenate([near, far], axis=0)          # N = 192
+    q = jnp.asarray(queries)
+    g_on = GuardConfig()
+    g_off = GuardConfig(enabled=False)
+    for frac in _SCHED_W_FRACTIONS:
+        w = max(1, int(round(frac * L)))
+        idx = build_index(series, w)
+        cascade = CascadeConfig(w=w, use_pallas=False)
+        plan = default_plan(cascade)
+
+        def run_off(qq, _c=cascade, _p=plan):
+            return run_plan(qq, idx, _c, _p, k=k, guards=g_off).lb
+
+        def run_on(qq, _c=cascade, _p=plan):
+            r = run_plan(qq, idx, _c, _p, k=k, guards=g_on)
+            return r.lb, r.guard.to_vector()
+
+        off_fn = jax.jit(run_off)
+        on_fn = jax.jit(run_on)
+        jax.block_until_ready(off_fn(q))
+        jax.block_until_ready(on_fn(q))
+        # alternate which side runs first within each pair: with on/off
+        # always in the same order the first call absorbs the allocator
+        # warm-up of the pair and the ratio carries a systematic bias
+        ratios = []
+        for it in range(50):
+            first, second = (on_fn, off_fn) if it % 2 == 0 \
+                else (off_fn, on_fn)
+            t0 = _time.perf_counter()
+            jax.block_until_ready(first(q))
+            t_a = _time.perf_counter() - t0
+            t0 = _time.perf_counter()
+            jax.block_until_ready(second(q))
+            t_b = _time.perf_counter() - t0
+            t_on, t_off = (t_a, t_b) if it % 2 == 0 else (t_b, t_a)
+            ratios.append(t_on / t_off - 1.0)
+        recs.append(dict(
+            name=f"guard_overhead_L256_w{w}_frac",
+            us_per_call=float(np.median(ratios)),
+            derived="median paired fractional overhead of default-on "
+                    "guards on the jitted bound pass (t_on/t_off - 1; "
+                    "CI bound 0.05)",
+        ))
+    return recs
+
+
 def kernel_records() -> list[dict]:
     """Each record: {name, us_per_call, derived} (derived is a string)."""
     recs = []
@@ -573,6 +652,9 @@ def kernel_records() -> list[dict]:
 
     # --- self-tuning planner: measured mass/cost plan commits -------------
     recs.extend(_plan_records())
+
+    # --- exactness guards: fractional overhead on the bound pass ----------
+    recs.extend(_guard_records())
     return recs
 
 

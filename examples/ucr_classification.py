@@ -103,6 +103,15 @@ def main() -> None:
           f"of {idx.n} candidates")
     print(f"cascade time      : {t_cascade:.2f}s   brute force: {t_brute:.2f}s "
           f"({t_brute / t_cascade:.1f}x speedup, identical results)")
+    # the default-on exactness guards (search/guards.py): admissibility /
+    # conservation / accounting counters for this search, plus whether
+    # the degradation ladder had to serve a brute-force fallback
+    if stats.guards is not None:
+        verdict = "tripped: " + ", ".join(stats.guards.tripped()) \
+            if stats.guards.tripped() else "all clear"
+        print(f"exactness guards  : {verdict}"
+              + ("   [DEGRADED]" if stats.degraded else ""))
+        print(f"                    {stats.guards.summary()}")
 
 
 if __name__ == "__main__":

@@ -160,14 +160,26 @@ def dtw_band_op(
     if L > _DTW_RESIDENT_MAX_L:
         wb = min(L if (w is None or w >= L) else w, L - 1)
         if stream_geometry(L, wb, tp, P, _DTW_VMEM_BUDGET) is None:
-            return ref.dtw_band_ref(a, b, w, cutoff)
-        return dtw_band_pallas(
-            a, b, w, cutoff, stream=True, tile_p=tp, interpret=_interpret()
+            out = ref.dtw_band_ref(a, b, w, cutoff)
+        else:
+            out = dtw_band_pallas(
+                a, b, w, cutoff, stream=True, tile_p=tp,
+                interpret=_interpret(),
+            )
+    else:
+        out = dtw_band_pallas(
+            a, b, w, cutoff, early_exit=early_exit, tile_p=tp,
+            interpret=_interpret(),
         )
-    return dtw_band_pallas(
-        a, b, w, cutoff, early_exit=early_exit, tile_p=tp,
-        interpret=_interpret(),
-    )
+    # fault seam (search/guards.py): the jnp reference mirrors do NOT
+    # pass through here, so the guard subsystem's degradation rerun
+    # (use_pallas=False) bypasses an injected kernel fault — the
+    # property tests/test_guards.py relies on.  Imported lazily:
+    # kernels must stay importable without the search package
+    from repro.search.guards import fault_hook
+
+    hook = fault_hook("dtw_out")
+    return out if hook is None else hook(out)
 
 
 # ---------------------------------------------------------------------------

@@ -86,6 +86,7 @@ from repro.kernels.ops import (
     lb_enhanced_pairwise_op,
 )
 from repro.kernels.ref import dtw_band_ref
+from repro.search import guards as _guards
 from repro.search.index import DTWIndex, kim_features
 from repro.search.pipeline import (
     TierStats,
@@ -177,12 +178,16 @@ class CascadeResult:
       stats: measured per-tier pricing (``TierStats``) when the plan was
         executed with ``collect_stats=True`` — the planner's input;
         ``None`` otherwise.
+      guard: the executor's ``GuardReport`` (admissibility seed
+        spot-check, compaction conservation, finite gates) when guards
+        ran; ``None`` when disabled.
     """
 
     lb: Array
     seed_idx: Array
     seed_d: Array
     stats: TierStats | None = None
+    guard: _guards.GuardReport | None = None
 
 
 def lb_kim_tier(q: Array, index: DTWIndex) -> Array:
@@ -375,6 +380,7 @@ def run_plan(
     *,
     exclude: Array | None = None,
     collect_stats: bool = False,
+    guards: "_guards.GuardConfig | None" = None,
 ) -> CascadeResult:
     """Execute a ``VerificationPlan``: all-pairs tiers -> compact ->
     pairwise tiers -> seed verification.
@@ -383,6 +389,17 @@ def run_plan(
     and inside the distributed ``shard_map``.  ``exclude`` removes a
     per-query candidate (leave-one-out) from seeding and compaction; its
     bound entry is left untouched for the engine to mask.
+
+    ``guards`` (``None`` = the default-on config; see search/guards.py)
+    threads the exactness guards through the executor: finite gates on
+    every tier output, conservation checks on the compaction gather and
+    scatter-max, and the admissibility spot-check on the seed pairs
+    (the seeds already carry exact DTW values, so the spot-check costs
+    only comparisons).  The checks are pure jnp and never raise — the
+    outcome lands in ``CascadeResult.guard``.  On clean finite data
+    every gate is the identity, so guarded results are bit-equal to
+    unguarded ones (property-tested; overhead priced by the
+    ``guard_overhead_*`` bench rows).
 
     ``collect_stats`` makes the executor *instrumented*: it snapshots the
     running bound after every tier and, once the seeds fix the threshold
@@ -403,11 +420,24 @@ def run_plan(
         dtw_fn = cfg.dtw_fn()
     qarange = jnp.arange(Q)
 
+    g = _guards.resolve_guards(guards)
+    gon = g.enabled
+    z32 = jnp.zeros((), jnp.float32)
+    nf_bounds = nf_dtw = z32                       # finite-gate counters
+    c_checked = c_viol = z32                       # conservation
+    a_checked = a_viol = a_gap = z32               # admissibility
+
     # ---- all-pairs tiers, in plan order (running elementwise max) ------
     lb01 = None
     ap_snaps = []                      # running max after each tier (stats)
+    hook_tier = _guards.fault_hook("tier_out")
     for tier in plan.all_pairs_tiers:
         t = tier.fn(q, index, cfg)
+        if hook_tier is not None:
+            t = hook_tier(t, tier.name)
+        if gon and g.finite_gates:
+            t, gated = _guards.finite_gate_bounds(t)
+            nf_bounds = nf_bounds + gated
         lb01 = t if lb01 is None else jnp.maximum(lb01, t)
         if collect_stats:
             ap_snaps.append(lb01)
@@ -435,6 +465,12 @@ def run_plan(
                 comp.limit_fn(sel_key, B, k), min(k, W), W
             ).astype(jnp.int32)
         _, cand = lax.top_k(-sel_key, W)             # ascending cheap bound
+        hook_cand = _guards.fault_hook("compaction_cand")
+        if hook_cand is not None:
+            cand = hook_cand(cand)
+        if gon and g.conservation:
+            cc, cv = _guards.conservation_check(cand, n)
+            c_checked, c_viol = c_checked + cc, c_viol + cv
 
         # ---- pairwise tiers on the packed survivor batches -------------
         chunk = min(cfg.candidate_chunk, W)
@@ -447,6 +483,9 @@ def run_plan(
             crows = index.series[cidx]
             urows = index.upper[cidx]
             lrows = index.lower[cidx]
+            hook_rows = _guards.fault_hook("packed_rows")
+            if hook_rows is not None:
+                crows, urows, lrows = hook_rows(crows, urows, lrows)
             # per-slot liveness from this query's refine allocation: the
             # packed layout keeps one query's slots contiguous, so light
             # queries yield whole dead pair tiles and the tier kernels
@@ -464,6 +503,11 @@ def run_plan(
                     t = tier.fn(qf, crows, urows, lrows, cfg, live=live)
                 else:   # no limit, or a pre-liveness custom tier
                     t = tier.fn(qf, crows, urows, lrows, cfg)
+                if hook_tier is not None:
+                    t = hook_tier(t, tier.name)
+                if gon and g.finite_gates:
+                    t, gated = _guards.finite_gate_bounds(t)
+                    nf_bounds = nf_bounds + gated
                 pe = t if pe is None else jnp.maximum(pe, t)
                 if collect_stats:
                     # running pairwise max after this tier, dead slots at
@@ -481,6 +525,9 @@ def run_plan(
             cols.append(block)
         enh = jnp.concatenate(cols, axis=1) if len(cols) > 1 else cols[0]
         lb = lb01.at[qarange[:, None], cand].max(enh)
+        if gon and g.conservation:
+            mc, mv = _guards.scatter_monotone_check(lb01, lb)
+            c_checked, c_viol = c_checked + mc, c_viol + mv
     else:
         lb = lb01
 
@@ -504,8 +551,30 @@ def run_plan(
     else:
         seed_d = dtw_fn(qs, cs, cfg.w)
     seed_d = seed_d.reshape(Q, k)
+    if gon and g.finite_gates:
+        # a NaN seed DTW would poison tau and the engine's warm start:
+        # gate it to +inf (unverifiable) and count the incident
+        seed_d, gated = _guards.finite_gate_dtw(seed_d)
+        nf_dtw = nf_dtw + gated
+    if gon and g.admissibility:
+        # the seeds *are* the sampled survivor pairs — their bound (the
+        # running max before the exact value lands) must not exceed
+        # their verified DTW; the comparison reuses values that already
+        # exist, so the spot-check costs no extra DTW
+        pre = jnp.take_along_axis(lb, seed_idx, axis=1)
+        ac, av, ag = _guards.admissibility_check(pre, seed_d, g.rtol, g.atol)
+        a_checked, a_viol = a_checked + ac, a_viol + av
+        a_gap = jnp.maximum(a_gap, ag)
     # seed pairs are exactly verified: their distance is the perfect bound
-    lb = lb.at[qarange[:, None], seed_idx].max(seed_d)
+    if gon and g.finite_gates:
+        # a gated (+inf) seed must not poison the bound matrix — +inf
+        # there means "never verify", the exact failure the gates exist
+        # to prevent; the engine re-opens such seeds for verification
+        lb = lb.at[qarange[:, None], seed_idx].max(
+            jnp.where(jnp.isfinite(seed_d), seed_d, -_INF)
+        )
+    else:
+        lb = lb.at[qarange[:, None], seed_idx].max(seed_d)
 
     stats = None
     if collect_stats:
@@ -584,7 +653,16 @@ def run_plan(
             queries=jnp.asarray(float(Q), jnp.float32),
             survivors=survivors,
         )
-    return CascadeResult(lb=lb, seed_idx=seed_idx, seed_d=seed_d, stats=stats)
+    guard = None
+    if gon:
+        guard = dataclasses.replace(
+            _guards.GuardReport.zeros(),
+            admiss_checked=a_checked, admiss_viol=a_viol, admiss_gap=a_gap,
+            conserve_checked=c_checked, conserve_viol=c_viol,
+            nonfinite_bounds=nf_bounds, nonfinite_dtw=nf_dtw,
+        )
+    return CascadeResult(lb=lb, seed_idx=seed_idx, seed_d=seed_d,
+                         stats=stats, guard=guard)
 
 
 def staged_bounds(

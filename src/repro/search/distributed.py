@@ -51,15 +51,23 @@ plus O(Q * k * shards) floats for the top-k merge — independent of both N
 and L — so the collective roofline term stays negligible at any corpus
 size (quantified in EXPERIMENTS.md SSRoofline).
 
-Known limitation (jax 0.4.x): wrapping the returned step in an *outer*
-``jax.jit`` miscompiles the engine's data-dependent verification
-``while_loop`` under ``shard_map(check_rep=False)`` — results silently
-drop candidates (reproduced against brute force at mesh (4, 2), N=256;
+Known limitation (jax 0.4.x), now *detected* instead of documented:
+wrapping the search step in an *outer* ``jax.jit`` miscompiles the
+engine's data-dependent verification ``while_loop`` under
+``shard_map(check_rep=False)`` — results silently drop candidates
+(reproduced against brute force down to mesh (4, 2), N=32, L=16;
 ``check_rep=True`` is unavailable: 0.4.x has no replication rule for
-``while``).  Call the returned step directly — it is already compiled
-per-shard and exactness-tested by tests/test_distributed.py, and the
-repro is pinned as a strict-xfail there so a container jax that fixes it
-(>= 0.6) flags the workaround for removal.
+``while``).  ``make_distributed_search`` therefore runs
+``guards.preflight_shard_map`` by default (``jit="auto"``): the real
+search step is jitted on a tiny canary store on the *same mesh* and
+compared against host brute force — exact means the returned step is
+``jax.jit``-wrapped (jax >= 0.6 takes this path), a mismatch means the
+safe unjitted per-shard-compiled step is returned and a ``GuardWarning``
+fires once per process.  The verdict is cached per (mesh shape, axes,
+jax version), so the canary cost is paid once.
+``tests/test_distributed.py`` pins the detection itself: the auto path
+must be exact on the exact mesh/shape that miscompiles, and the raw
+jitted step must disagree with brute force iff preflight said so.
 """
 
 from __future__ import annotations
@@ -72,6 +80,7 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.search import guards as _guards
 from repro.search.engine import EngineConfig, nn_search
 from repro.search.index import DTWIndex
 from repro.search.pipeline import (
@@ -264,6 +273,91 @@ def calibrate_distributed_plan(
     )
 
 
+def _build_step(
+    mesh: Mesh,
+    cfg: EngineConfig,
+    *,
+    data_axes: tuple[str, ...] = ("data",),
+    query_axis: str = "model",
+    global_budget: bool = True,
+    plan: VerificationPlan | None = None,
+    with_guards: bool = False,
+):
+    """The raw (unjitted) shard_map search step — shared by
+    ``make_distributed_search`` and the preflight canary (which must
+    build the *real* step: the minimal while_loop repro does not trip
+    the 0.4.x miscompile, the engine's verification loop does)."""
+    axes = tuple(data_axes)
+    if plan is None:
+        plan = _default_distributed_plan(cfg, axes, global_budget)
+    gcfg = _guards.resolve_guards(cfg.guards)
+
+    def local_step(series, labels, upper, lower, kim, kim_ok, queries):
+        index = DTWIndex(
+            series=series, labels=labels, upper=upper, lower=lower,
+            kim=kim, kim_ok=kim_ok, w=cfg.cascade.w,
+        )
+        res, grep = nn_search(index, queries, cfg, plan=plan,
+                              with_guards=True)
+        n_local = series.shape[0]
+        gidx = res.idx + (_combined_axis_index(axes) * n_local).astype(jnp.int32)
+        # merge local top-k across the data axes
+        d_all = lax.all_gather(res.dists, axes)        # (D, Qloc, k)
+        i_all = lax.all_gather(gidx, axes)
+        hook = _guards.fault_hook("allgather_topk")
+        if hook is not None:
+            d_all = hook(d_all)
+        if gcfg.enabled and gcfg.conservation:
+            # shard-dropout echo check: this shard's own top-k must come
+            # back intact from the gather — a dead or corrupted shard
+            # loses candidates from every query's merge, silently
+            mine = jnp.take(d_all, _combined_axis_index(axes), axis=0)
+            lost = jnp.sum(
+                jnp.any(mine != res.dists, axis=-1)
+            ).astype(jnp.float32)
+            grep = dataclasses.replace(
+                grep,
+                conserve_checked=grep.conserve_checked
+                + float(res.dists.shape[0]),
+                conserve_viol=grep.conserve_viol + lost,
+            )
+        d_flat = jnp.moveaxis(d_all, 0, 1).reshape(res.dists.shape[0], -1)
+        i_flat = jnp.moveaxis(i_all, 0, 1).reshape(res.dists.shape[0], -1)
+        k = res.dists.shape[1]
+        neg, sel = lax.top_k(-d_flat, k)
+        merged_d = -neg
+        merged_i = jnp.take_along_axis(i_flat, sel, axis=1)
+        n_dtw = lax.psum(res.n_dtw, axes)
+        if not with_guards:
+            return merged_d, merged_i, n_dtw
+        # fleet-wide guard merge, TierStats-style: counts psum over the
+        # whole mesh, the admissibility gap pmaxes; the flat vector form
+        # crosses the out_specs as a plain replicated array
+        gv = grep.to_vector()
+        all_axes = axes + (query_axis,)
+        merged = lax.psum(gv, all_axes)
+        gap_i = _guards._VEC_FIELDS.index("admiss_gap")
+        merged = merged.at[gap_i].set(lax.pmax(gv[gap_i], all_axes))
+        return merged_d, merged_i, n_dtw, merged
+
+    in_specs = (
+        P(axes, None),   # series      (N, L)  sharded on N
+        P(axes),         # labels      (N,)
+        P(axes, None),   # upper       (N, L)
+        P(axes, None),   # lower       (N, L)
+        P(axes, None),   # kim         (N, 4)
+        P(axes, None),   # kim_ok      (N, 2)
+        P(query_axis, None),  # queries (Q, L) sharded on Q
+    )
+    out_specs = (P(query_axis, None), P(query_axis, None), P(query_axis))
+    if with_guards:
+        out_specs = out_specs + (P(None),)     # replicated guard vector
+    from repro.distributed.sharding import shard_map_compat
+    return shard_map_compat(
+        local_step, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+    )
+
+
 def make_distributed_search(
     mesh: Mesh,
     cfg: EngineConfig,
@@ -272,8 +366,10 @@ def make_distributed_search(
     query_axis: str = "model",
     global_budget: bool = True,
     plan: VerificationPlan | None = None,
+    jit: bool | str = "auto",
+    with_guards: bool = False,
 ):
-    """Build a jittable distributed search step for ``mesh``.
+    """Build a distributed search step for ``mesh``.
 
     Returns ``step(series, labels, upper, lower, kim, kim_ok, queries)``
     mapping sharded index leaves + queries to ``(dists, idx, n_dtw)`` with
@@ -288,45 +384,44 @@ def make_distributed_search(
     a ``calibrate_distributed_plan`` decision commits: the calibrated
     plan already carries the composed global-budget/refine-limit
     compaction, so it is used as-is.
+
+    ``jit`` selects the degradation policy for the jax 0.4.x
+    ``jit(shard_map(while))`` miscompile (module docstring):
+
+      * ``"auto"`` (default): run ``guards.preflight_shard_map`` once per
+        (mesh shape, axes, jax version) — exact canary gets the
+        ``jax.jit``-wrapped step, a miscompiling one gets the safe
+        unjitted step plus a once-per-process ``GuardWarning``;
+      * ``True`` / ``False``: skip the canary and force the jitted /
+        unjitted step (``True`` on a known-bad jax serves wrong results
+        — it exists for the preflight test itself).
+
+    ``with_guards`` appends the fleet-merged ``GuardReport`` *vector*
+    (``GuardReport.from_vector`` restores the struct) as a fourth output:
+    per-shard reports are psum/pmax-merged over the whole mesh inside the
+    step, so every host sees one global report covering admissibility,
+    conservation (including the shard-dropout echo check on the top-k
+    all_gather), accounting, and finite gates.
     """
-    axes = tuple(data_axes)
-    if plan is None:
-        plan = _default_distributed_plan(cfg, axes, global_budget)
-
-    def local_step(series, labels, upper, lower, kim, kim_ok, queries):
-        index = DTWIndex(
-            series=series, labels=labels, upper=upper, lower=lower,
-            kim=kim, kim_ok=kim_ok, w=cfg.cascade.w,
-        )
-        res = nn_search(index, queries, cfg, plan=plan)
-        n_local = series.shape[0]
-        gidx = res.idx + (_combined_axis_index(axes) * n_local).astype(jnp.int32)
-        # merge local top-k across the data axes
-        d_all = lax.all_gather(res.dists, axes)        # (D, Qloc, k)
-        i_all = lax.all_gather(gidx, axes)
-        d_flat = jnp.moveaxis(d_all, 0, 1).reshape(res.dists.shape[0], -1)
-        i_flat = jnp.moveaxis(i_all, 0, 1).reshape(res.dists.shape[0], -1)
-        k = res.dists.shape[1]
-        neg, sel = lax.top_k(-d_flat, k)
-        merged_d = -neg
-        merged_i = jnp.take_along_axis(i_flat, sel, axis=1)
-        n_dtw = lax.psum(res.n_dtw, axes)
-        return merged_d, merged_i, n_dtw
-
-    in_specs = (
-        P(axes, None),   # series      (N, L)  sharded on N
-        P(axes),         # labels      (N,)
-        P(axes, None),   # upper       (N, L)
-        P(axes, None),   # lower       (N, L)
-        P(axes, None),   # kim         (N, 4)
-        P(axes, None),   # kim_ok      (N, 2)
-        P(query_axis, None),  # queries (Q, L) sharded on Q
+    step = _build_step(
+        mesh, cfg, data_axes=data_axes, query_axis=query_axis,
+        global_budget=global_budget, plan=plan, with_guards=with_guards,
     )
-    out_specs = (P(query_axis, None), P(query_axis, None), P(query_axis))
-    from repro.distributed.sharding import shard_map_compat
-    return shard_map_compat(
-        local_step, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+    if jit is False:
+        return step
+    if jit is True:
+        return jax.jit(step)
+    safe = _guards.preflight_shard_map(mesh, tuple(data_axes), query_axis)
+    if safe:
+        return jax.jit(step)
+    _guards.warn_once(
+        "jit_shard_map_while",
+        "preflight: jit(shard_map) miscompiles the verification "
+        f"while_loop on this jax ({jax.__version__}) — candidates are "
+        "silently dropped; auto-selected the unjitted per-shard-compiled "
+        "search step (exact, modestly slower dispatch)",
     )
+    return step
 
 
 def shard_index(mesh: Mesh, index: DTWIndex, data_axes=("data",)) -> DTWIndex:

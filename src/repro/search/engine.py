@@ -46,6 +46,7 @@ metric counts: ``P = 1 - n_dtw / N``.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 
 import jax
 import jax.numpy as jnp
@@ -55,6 +56,7 @@ from jax import lax
 from repro.kernels.ops import dtw_band_op
 from repro.kernels.ref import dtw_band_ref
 from repro.kernels.tiling import sched_pair_tile, unpermute_pairs
+from repro.search import guards as _g
 from repro.search import planner as _planner
 from repro.search.cascade import (
     CascadeConfig,
@@ -120,6 +122,13 @@ class EngineConfig:
         budget.
       planner: decision thresholds for the commit (``None`` =
         ``PlannerConfig()`` defaults).
+      guards: exactness-guard configuration (search/guards.py).  ``None``
+        means the *default-on* ``GuardConfig()`` — admissibility spot
+        checks, conservation, accounting and finite gates all run (their
+        overhead is priced and CI-bounded; see the ``guard_overhead_*``
+        bench rows).  Pass ``GuardConfig(enabled=False)`` to opt out;
+        ``REPRO_FORCE_GUARDS=1`` in the environment overrides everything
+        on.
     """
 
     cascade: CascadeConfig
@@ -127,6 +136,7 @@ class EngineConfig:
     k: int = 1
     auto_plan: bool = False
     planner: PlannerConfig | None = None
+    guards: _g.GuardConfig | None = None
 
 
 @dataclasses.dataclass(frozen=True)
@@ -151,6 +161,11 @@ class SearchStats:
       calibrated: whether a planner decision produced the committed plan.
       n_dtw: (Q,) DTW verifications per query.
       n: store size (the pruning-power denominator).
+      guards: the merged ``GuardReport`` (cascade + engine) for the
+        search, ``None`` when guards were disabled.
+      degraded: whether a tripped guard forced the degradation-ladder
+        fallback to reference brute force (the returned result is the
+        fallback's).
     """
 
     tiers: TierStats
@@ -162,6 +177,8 @@ class SearchStats:
     calibrated: bool
     n_dtw: Array
     n: int
+    guards: "_g.GuardReport | None" = None
+    degraded: bool = False
 
     def pruning_power(self) -> Array:
         return 1.0 - np.asarray(self.n_dtw) / self.n
@@ -184,6 +201,11 @@ class SearchStats:
             f"n_dtw: {int(nd.sum())} of {nd.size * self.n} pairs verified "
             f"(mean pruning power {float(np.mean(self.pruning_power())):.1%})"
         )
+        if self.guards is not None:
+            gline = self.guards.summary()
+            if self.degraded:
+                gline += "   [DEGRADED: reference brute force served]"
+            lines.append(gline)
         return "\n".join(lines)
 
 
@@ -231,6 +253,8 @@ def nn_search(
     exclude: Array | None = None,
     plan: VerificationPlan | None = None,
     with_stats: bool = False,
+    with_guards: bool = False,
+    sanitize: bool = False,
 ):
     """Exact k-NN-DTW for a batch of queries.
 
@@ -249,6 +273,24 @@ def nn_search(
       with_stats: also return a ``SearchStats`` report (host-side only —
         staged cascades on concrete inputs).  Returns ``(SearchResult,
         SearchStats)`` instead of the bare result.
+      with_guards: return ``(SearchResult, GuardReport)`` instead of the
+        bare result — unlike ``with_stats`` this works under tracing
+        (the report is a pytree of scalars), which is how the
+        distributed step surfaces guard outcomes across ``shard_map``.
+        Ignored when ``with_stats`` is set (the report rides on
+        ``SearchStats.guards``).
+      sanitize: input hygiene for *queries* on concrete inputs: without
+        it a query batch containing NaN/Inf raises; with it the bad
+        values are masked to the per-series finite mean, warned about,
+        and counted into the guard report (guards.validate_series).
+        Store-side hygiene belongs to ``build_index``.
+
+    Degradation (see search/guards.py): when the engine's default-on
+    guards trip on concrete inputs, the batch is re-served via reference
+    brute force (jnp kernels, no bound pruning — a tripped guard means
+    the bounds themselves are untrusted, so any pruned rerun could
+    consult the same lie), a ``GuardWarning`` fires, and the incident is
+    surfaced in ``SearchStats`` (``guards`` / ``degraded``).
 
     Calibrate-then-commit (``cfg.auto_plan``): a cold search runs its
     first ``cfg.planner.calibrate_block`` queries under the base plan
@@ -259,6 +301,9 @@ def nn_search(
     base plan's by construction; only bound work changes.
     """
     q = jnp.asarray(queries, jnp.float32)
+    hyg = None
+    if not isinstance(q, jax.core.Tracer):
+        q, hyg = _g.validate_series(q, name="query", sanitize=sanitize)
     Q = q.shape[0]
     N = index.n
     k = min(cfg.k, N)
@@ -283,8 +328,8 @@ def nn_search(
         decision = _planner.lookup_plan(index, cascade, k, plan, pcfg)
         if decision is not None:
             # committed: the whole batch runs the optimised plan
-            res, _ = _search(index, q, cfg, plan=decision.plan,
-                             exclude=exclude)
+            res, _, guard = _search(index, q, cfg, plan=decision.plan,
+                                    exclude=exclude)
             stats = decision.stats
         else:
             # calibrate: a strided query block runs the full base plan
@@ -297,9 +342,9 @@ def nn_search(
             qa = q[pick]
             ex_a = None if exclude is None else exclude[pick]
             cascade_a = _resolve_cascade(qa, index, cascade, k, ex_a, plan)
-            res_a, stats = _search(index, qa, cfg, plan=plan,
-                                   exclude=ex_a, cascade=cascade_a,
-                                   collect_stats=True)
+            res_a, stats, guard = _search(index, qa, cfg, plan=plan,
+                                          exclude=ex_a, cascade=cascade_a,
+                                          collect_stats=True)
             decision = _planner.optimise_plan(
                 plan, stats, n=N, k=k,
                 base_budget=_planner.base_budget_for(
@@ -309,8 +354,11 @@ def nn_search(
             _planner.commit_plan(index, cascade, k, plan, decision, pcfg)
             if rest.size:
                 ex_b = None if exclude is None else exclude[rest]
-                res_b, _ = _search(index, q[rest], cfg, plan=decision.plan,
-                                   exclude=ex_b)
+                res_b, _, guard_b = _search(index, q[rest], cfg,
+                                            plan=decision.plan,
+                                            exclude=ex_b)
+                if guard is not None and guard_b is not None:
+                    guard = guard.merge(guard_b)
                 inv = jnp.asarray(np.argsort(np.concatenate([pick, rest])))
                 res = SearchResult(
                     dists=jnp.concatenate([res_a.dists, res_b.dists])[inv],
@@ -322,10 +370,49 @@ def nn_search(
                 res = res_a
         committed = decision.plan
     else:
-        res, stats = _search(index, q, cfg, plan=plan, exclude=exclude,
-                             collect_stats=with_stats)
+        res, stats, guard = _search(index, q, cfg, plan=plan,
+                                    exclude=exclude,
+                                    collect_stats=with_stats)
         committed = plan
+
+    # ---- degradation ladder layer 2 (search/guards.py) -----------------
+    # a tripped admissibility / conservation / accounting / NaN-DTW guard
+    # means *neither the bounds nor the compiled verification path* can
+    # be trusted for this batch — pruning with a lying bound silently
+    # loses neighbours, and re-running the same cascade would consult the
+    # same lie.  The only sound serve is full verification: reference
+    # brute force (jnp kernels, no bound pruning, no Pallas dispatch),
+    # with the incident surfaced.  Host-side only — tripped() syncs.
+    gcfg = _g.resolve_guards(cfg.guards)
+    if hyg is not None and hyg.any() and guard is not None:
+        guard = guard.merge(_g.hygiene_to_report(hyg))
+    degraded = False
+    if (
+        guard is not None and gcfg.enabled and gcfg.degrade and concrete
+        and guard.tripped()
+    ):
+        trip = ", ".join(guard.tripped())
+        warnings.warn(
+            f"exactness guards tripped ({trip}): serving this query "
+            "batch via reference brute force (jnp kernels, bounds "
+            "untrusted); see SearchStats.guards",
+            _g.GuardWarning,
+            stacklevel=2,
+        )
+        bf_d, bf_i = brute_force(index, q, cascade.w, k=k, exclude=exclude,
+                                 use_pallas=False)
+        res = SearchResult(
+            dists=bf_d, idx=bf_i,
+            n_dtw=jnp.full((Q,), N, jnp.int32),
+            lb=res.lb,   # diagnostics only — flagged untrusted via degraded
+        )
+        guard = dataclasses.replace(guard, degraded=guard.degraded + 1.0)
+        degraded = True
+
     if not with_stats:
+        if with_guards:
+            return res, (guard if guard is not None
+                         else _g.GuardReport.zeros())
         return res
     report = SearchStats(
         tiers=stats,
@@ -337,6 +424,8 @@ def nn_search(
         calibrated=decision is not None,
         n_dtw=res.n_dtw,
         n=N,
+        guards=guard,
+        degraded=degraded,
     )
     return res, report
 
@@ -350,12 +439,15 @@ def _search(
     exclude: Array | None = None,
     cascade: CascadeConfig | None = None,
     collect_stats: bool = False,
-) -> tuple[SearchResult, TierStats | None]:
+) -> tuple[SearchResult, TierStats | None, "_g.GuardReport | None"]:
     """One engine pass under one plan (the pre-planner ``nn_search`` body).
 
     ``cascade`` is the budget-resolved config (``None`` resolves here);
     ``collect_stats`` threads the instrumented executor through the bound
-    pass and returns its ``TierStats`` alongside the result.
+    pass and returns its ``TierStats`` alongside the result.  The third
+    return is the merged cascade + engine ``GuardReport`` (``None`` when
+    guards are disabled); the degradation decision belongs to
+    ``nn_search``, not here.
     """
     q = jnp.asarray(queries, jnp.float32)
     Q, L = q.shape
@@ -368,13 +460,18 @@ def _search(
     dtw_fn = dtw_band_op if cascade.use_pallas else dtw_band_ref
     qarange = jnp.arange(Q)
 
+    g = _g.resolve_guards(cfg.guards)
+    gon = g.enabled
+
     tier_stats = None
+    guard0 = None
     if cascade.staged:
         cres = run_plan(
             q, index, cascade, plan, k=k, dtw_fn=dtw_fn, exclude=exclude,
-            collect_stats=collect_stats,
+            collect_stats=collect_stats, guards=g,
         )
         tier_stats = cres.stats
+        guard0 = cres.guard
         lb = cres.lb
         # seeds are already verified: warm-start the top-k with them and
         # drop them from the unverified ordering
@@ -382,7 +479,16 @@ def _search(
         best_d0 = jnp.take_along_axis(cres.seed_d, sel, axis=1)
         best_i0 = jnp.take_along_axis(cres.seed_idx, sel, axis=1)
         n_dtw0 = jnp.full((Q,), k, jnp.int32)
-        lb_order = lb.at[qarange[:, None], cres.seed_idx].set(_INF)
+        if gon and g.finite_gates:
+            # a gated (+inf) seed was never really verified: leave its
+            # bound in the ordering so the loop verifies the candidate
+            # instead of losing it behind the seed mask
+            cur = jnp.take_along_axis(lb, cres.seed_idx, axis=1)
+            lb_order = lb.at[qarange[:, None], cres.seed_idx].set(
+                jnp.where(jnp.isfinite(cres.seed_d), _INF, cur)
+            )
+        else:
+            lb_order = lb.at[qarange[:, None], cres.seed_idx].set(_INF)
     else:
         lb = compute_bounds(q, index, cascade, k=k, plan=plan)
         best_d0 = jnp.full((Q, k), _INF, jnp.float32)
@@ -421,7 +527,7 @@ def _search(
     ) if bound_sched else plan.verify_tile_p
 
     def body(state):
-        r, best_d, best_i, n_dtw, cursor, done = state
+        r, best_d, best_i, n_dtw, cursor, done, gacc = state
         n_un = jnp.maximum(jnp.sum(~done), 1)
         quota = jnp.minimum(P // n_un, T_max)             # ranks per query
         qorder = jnp.argsort(done)                        # undone first
@@ -432,10 +538,14 @@ def _search(
         valid = (~done[qi]) & (rank < N) & (stripe < quota)
         rank_c = jnp.minimum(rank, N - 1)
         cidx = order[qi, rank_c]                          # candidate ids
-        # +inf-sorted ranks are masked-out entries (verified seeds /
-        # excluded candidates) — never re-verify them, or their results
-        # would duplicate existing top-k members
-        valid = valid & jnp.isfinite(slb[qi, rank_c])
+        # exactly-+inf-sorted ranks are masked-out entries (verified
+        # seeds / excluded candidates) — never re-verify them, or their
+        # results would duplicate existing top-k members.  Only +inf is
+        # an intentional mask: NaN or -inf there means a poisoned bound,
+        # and those candidates must STAY eligible so a bad bound
+        # degrades to verification (safe) instead of silent exclusion
+        # (wrong answers) — guards.verification_eligible
+        valid = valid & _g.verification_eligible(slb[qi, rank_c])
         lbv = jnp.where(valid, slb[qi, rank_c], _INF)
         kth0 = best_d[:, k - 1]
         # thread each query's current k-th best into the kernel's per-pair
@@ -459,7 +569,20 @@ def _search(
             # round_tile is None here unless the plan pinned verify_tile_p
             d = dtw_fn(q[qi], index.series[cidx], w, kth0[qi],
                        tile_p=round_tile)                 # (P,)
+        z32 = jnp.zeros((), jnp.float32)
+        a_chk = a_vio = a_gap = acc_chk = acc_vio = nf_dtw = z32
+        if gon and g.finite_gates:
+            # a NaN verification value would poison the top-k merge:
+            # gate it to +inf (cannot enter the top-k) and count it —
+            # nn_search's degradation decides whether +inf was safe
+            d, nf_dtw = _g.finite_gate_dtw(d, valid=valid)
         d = jnp.where(valid, d, _INF)
+        if gon and g.admissibility:
+            # every verified lane doubles as an admissibility sample:
+            # its tier bound must not exceed its exact DTW
+            a_chk, a_vio, a_gap = _g.admissibility_check(
+                lbv, d, g.rtol, g.atol, valid=valid
+            )
         # per-query gather of this round's results (stripe layout)
         t = jnp.arange(T_max)
         slots = pos[:, None] + t[None, :] * n_un          # (Q, T_max)
@@ -481,16 +604,32 @@ def _search(
         # candidates of the same round have updated the running best.
         kth1 = best_d[:, k - 1]
         active = valid & ((lbv < kth1[qi]) | (d <= kth1[qi]))
-        n_dtw = n_dtw + jax.ops.segment_sum(
-            active.astype(jnp.int32), qi, num_segments=Q
-        )
+        inc = active.astype(jnp.int32)
+        seg = jax.ops.segment_sum(inc, qi, num_segments=Q)
+        hook_cnt = _g.fault_hook("engine_count")
+        if hook_cnt is not None:
+            seg = hook_cnt(seg)
+        if gon and g.accounting:
+            # the per-query scatter must conserve the flat liveness
+            # mirror's total — a dropped or double-counted slot here is
+            # the while-loop miscompile's accounting signature
+            acc_chk = jnp.asarray(1.0, jnp.float32)
+            acc_vio = (jnp.sum(seg) != jnp.sum(inc)).astype(jnp.float32)
+        n_dtw = n_dtw + seg
         cursor = jnp.minimum(cursor + jnp.where(~done, quota, 0), N)
         next_lb = slb_pad[qarange, cursor]
         done = done | (best_d[:, k - 1] <= next_lb) | (cursor >= N)
-        return r + 1, best_d, best_i, n_dtw, cursor, done
+        if gon:
+            gacc = jnp.stack([
+                gacc[0] + a_chk, gacc[1] + a_vio,
+                jnp.maximum(gacc[2], a_gap),
+                gacc[3] + acc_chk, gacc[4] + acc_vio,
+                gacc[5] + nf_dtw,
+            ])
+        return r + 1, best_d, best_i, n_dtw, cursor, done, gacc
 
     def cond(state):
-        r, _, _, _, _, done = state
+        r, _, _, _, _, done, _ = state
         return (r < max_rounds) & ~jnp.all(done)
 
     # queries whose seeded k-th best already certifies against the smallest
@@ -503,10 +642,31 @@ def _search(
         n_dtw0,
         jnp.zeros((Q,), jnp.int32),
         done0,
+        jnp.zeros((6,), jnp.float32),
     )
-    _, best_d, best_i, n_dtw, _, _ = lax.while_loop(cond, body, state)
+    _, best_d, best_i, n_dtw, _, _, gacc = lax.while_loop(cond, body, state)
+    guard = None
+    if gon:
+        guard = dataclasses.replace(
+            _g.GuardReport.zeros(),
+            admiss_checked=gacc[0], admiss_viol=gacc[1], admiss_gap=gacc[2],
+            account_checked=gacc[3], account_viol=gacc[4],
+            nonfinite_dtw=gacc[5],
+        )
+        if g.accounting:
+            # end-of-search bounds: every query verified at least its
+            # seeds (staged) and never more than the whole store
+            floor = k if cascade.staged else 0
+            bv = jnp.sum((n_dtw > N) | (n_dtw < floor)).astype(jnp.float32)
+            guard = dataclasses.replace(
+                guard,
+                account_checked=guard.account_checked + float(Q),
+                account_viol=guard.account_viol + bv,
+            )
+        if guard0 is not None:
+            guard = guard0.merge(guard)
     return SearchResult(dists=best_d, idx=best_i, n_dtw=n_dtw, lb=lb), \
-        tier_stats
+        tier_stats, guard
 
 
 def classify(

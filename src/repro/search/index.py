@@ -75,10 +75,30 @@ def build_index(
     labels: Array | None = None,
     *,
     normalize: bool = False,
+    sanitize: bool = False,
+    preflight: bool = False,
     calibrate: Any | None = None,
     calibrate_sample: int = 8,
 ) -> DTWIndex:
     """Build a ``DTWIndex`` for window ``w``.
+
+    Input hygiene (concrete inputs; skipped under tracing like the
+    calibration below): a store containing NaN/Inf raises — one poisoned
+    value flows silently into envelopes, Kim features, and every bound
+    otherwise — as does, with ``normalize=True``, a zero-variance series
+    (z-norm maps it to all-zeros, which then matches every flat query at
+    distance ~0).  ``sanitize=True`` masks bad values to the per-series
+    finite mean, keeps flat series (znorm's epsilon maps them to zeros),
+    and reports everything via a ``GuardWarning``
+    (guards.validate_series).
+
+    ``preflight`` runs ``guards.preflight_engine()`` — the single-device
+    jitted-engine-vs-brute-force canary — before the store is returned,
+    warning (once per process) if the compiled path is not exact on this
+    jax install.  The distributed analogue lives in
+    ``make_distributed_search`` (its preflight is on by default because
+    the jax 0.4.x ``jit(shard_map(while))`` miscompile is a known,
+    detectable failure).
 
     ``calibrate`` (an ``EngineConfig`` or ``CascadeConfig``) runs store-
     level plan calibration at build time: a ``calibrate_sample``-series
@@ -95,6 +115,14 @@ def build_index(
     for unstaged cascades.
     """
     series = jnp.asarray(series, jnp.float32)
+    if not isinstance(series, jax.core.Tracer):
+        from repro.search import guards as _guards
+
+        series, _ = _guards.validate_series(
+            series, name="series", sanitize=sanitize, check_flat=normalize,
+        )
+        if preflight:
+            _guards.preflight_engine()
     if normalize:
         series = znorm(series)
     if labels is None:

@@ -33,6 +33,20 @@ is running):
     against).  The schedule is a packing permutation only — results and
     per-query ``n_dtw`` are invariant under it.
 
+Every stage of this pipeline is also a *checked invariant boundary*
+(search/guards.py): tier outputs pass a finite-value gate (a registered
+tier that emits NaN degrades its pairs to verification instead of
+poisoning the ranking), the compaction gather is covered by the
+survivor-mass conservation check (every selected candidate appears in
+the pack exactly once, scatter-max refinement is monotone), and the
+executor's seed verification doubles as the admissibility spot-check
+(tier bound <= verified DTW).  A custom tier therefore does not need to
+be trusted to be *correct* to be safe to register — an inadmissible
+bound trips the guard and the engine serves the reference fallback —
+but it does need to be admissible to be *useful*.  The deterministic
+fault injectors in testing/faults.py target exactly these stage
+boundaries (``tier_out``, ``compaction_cand``, ``packed_rows``).
+
 Registering a custom tier (worked example — this exact pattern is
 exercised by tests/test_scheduler.py and tests/test_planner.py).  A
 registered tier is not just runnable, it is *priced*: the executor can

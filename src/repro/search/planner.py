@@ -448,8 +448,33 @@ def calibrate_plan(
         cascade_r = dataclasses.replace(cascade, survivor_budget=budget)
     cres = run_plan(qs, index, cascade_r, base, k=k, exclude=ex,
                     collect_stats=True)
-    decision = optimise_plan(
-        base, cres.stats, n=index.n, k=k,
-        base_budget=base_budget_for(index, cascade_r, k, base), pcfg=pcfg,
-    )
+    if cres.guard is not None and cres.guard.tripped():
+        # a measurement taken under a tripped exactness guard prices
+        # garbage — committing a rewrite from it would pin a poisoned
+        # plan on every later search against this store.  Commit the
+        # base plan unchanged instead (same no-rewrite shape as the
+        # degenerate all-zero-mass measurement) and let the runtime
+        # guards/degradation handle the searches themselves.
+        import warnings as _warnings
+
+        from repro.search.guards import GuardWarning
+
+        _warnings.warn(
+            "plan calibration measured under tripped exactness guards "
+            f"({', '.join(cres.guard.tripped())}); committing the base "
+            "plan unchanged",
+            GuardWarning,
+            stacklevel=2,
+        )
+        decision = PlanDecision(
+            plan=base, base=base, stats=_host_stats(cres.stats),
+            dropped=(), order=tuple(t.name for t in base.tiers),
+            budget=None, limit=None,
+        )
+    else:
+        decision = optimise_plan(
+            base, cres.stats, n=index.n, k=k,
+            base_budget=base_budget_for(index, cascade_r, k, base),
+            pcfg=pcfg,
+        )
     return commit_plan(index, cascade, k, base, decision, pcfg)

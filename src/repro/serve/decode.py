@@ -4,6 +4,17 @@
 state — the serving inner loop the ``decode_*`` dry-run shapes lower.
 Weight-stationary serve sharding (DESIGN.md SS6 / SSPerf hillclimb 2) is a
 property of the shardings attached to ``params``, not of this code.
+
+Serving checklist (applies equally to a search deployment — see
+search/guards.py): before a process takes traffic, run the preflight
+self-tests against the compiled paths it will serve from —
+``build_index(..., preflight=True)`` for the single-device engine,
+``preflight_shard_map(mesh, ...)`` (or simply
+``make_distributed_search(..., jit="auto")``) for the sharded step — and
+admit inputs through the hygiene boundary (``sanitize=`` on
+``build_index`` / ``nn_search``) rather than trusting upstream data.  The
+runtime guards then stay default-on; a tripped guard degrades to the
+reference path instead of serving a silently wrong answer.
 """
 
 from __future__ import annotations

@@ -1,0 +1,3 @@
+"""Test-support machinery (fault injection) — never imported by the
+production search stack; the stack only exposes the seams
+(``search/guards.py:_FAULT_HOOKS``) this package populates."""

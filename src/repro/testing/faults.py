@@ -1,0 +1,211 @@
+"""Deterministic fault injectors: prove every guard *trips*.
+
+A guard that only ever passes is indistinguishable from a guard that
+checks nothing — tests/test_guards.py pairs each injector here with the
+guard that must catch it, so the guard subsystem's detection claims are
+themselves tested (the same discipline as the strict-xfail that pinned
+the shard_map miscompile).
+
+Mechanics: ``inject(name, fn)`` installs ``fn`` into the
+``search/guards.py`` ``_FAULT_HOOKS`` registry for the duration of a
+``with`` block; production call sites consult the registry with a single
+dict lookup *at trace time*, so outside the harness the seams cost
+nothing and compile to nothing.  Hooks are pure jnp transforms of the
+value flowing through the seam — they trace like any other op, so the
+faults fire identically under ``jit`` and ``shard_map``.
+
+The seams (see guards.py module docstring):
+
+  ``tier_out``          (t, tier_name) -> t     bound-tier output
+  ``compaction_cand``   (cand) -> cand          compaction's (Q, W) pick
+  ``packed_rows``       (crows, urows, lrows) -> same   packed survivors
+  ``dtw_out``           (d) -> d                kernels/ops.py DTW dispatch
+  ``engine_count``      (seg) -> seg            engine per-round n_dtw inc
+  ``allgather_topk``    (d_all) -> d_all        distributed top-k merge
+
+Everything is deterministic — fixed rows, fixed scales, no RNG — so a
+tripped guard reproduces bit-for-bit.
+"""
+
+from __future__ import annotations
+
+import contextlib
+from typing import Callable, Iterator
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.search import guards as _guards
+
+
+@contextlib.contextmanager
+def inject(name: str, fn: Callable) -> Iterator[None]:
+    """Install ``fn`` at seam ``name`` for the duration of the block.
+
+    Teardown is guaranteed (``finally``), and nesting different seams
+    composes; re-entering the *same* seam inside its own block raises —
+    a silently shadowed injector would make a trip test vacuous.
+    """
+    if name in _guards._FAULT_HOOKS:
+        raise RuntimeError(f"fault seam {name!r} already injected")
+    _guards._FAULT_HOOKS[name] = fn
+    try:
+        yield
+    finally:
+        _guards._FAULT_HOOKS.pop(name, None)
+
+
+# ---------------------------------------------------------------------------
+# input corruption (plain data transforms — exercised via hygiene)
+# ---------------------------------------------------------------------------
+
+
+def corrupt_series(x, rows=(0,), cols=(0,), value: float = np.nan):
+    """NaN/Inf-corrupt fixed positions of a (N, L) array (host-side).
+
+    The hygiene injector: feed the result to ``build_index`` /
+    ``nn_search`` and the boundary validation must reject it (or, with
+    ``sanitize=True``, mask it and count it in the report).
+    """
+    arr = np.array(x, np.float32, copy=True)
+    for r in rows:
+        for c in cols:
+            arr[r, c] = value
+    return arr
+
+
+def poison_envelopes(index, rows=(0,), value: float = np.nan):
+    """Return a copy of a ``DTWIndex`` whose envelope rows are poisoned.
+
+    Simulates precomputation corruption *past* the hygiene boundary
+    (bit-rot, a bad checkpoint restore): the bands tiers consume the
+    poisoned envelopes and emit non-finite bounds — the finite-value
+    gate must contain them (count them, keep results exact).
+    """
+    import dataclasses
+
+    rows = np.asarray(rows)
+    upper = np.array(index.upper, np.float32, copy=True)
+    lower = np.array(index.lower, np.float32, copy=True)
+    upper[rows] = value
+    lower[rows] = value
+    return dataclasses.replace(
+        index, upper=jnp.asarray(upper), lower=jnp.asarray(lower)
+    )
+
+
+# ---------------------------------------------------------------------------
+# seam injectors (context managers)
+# ---------------------------------------------------------------------------
+
+
+def inadmissible_tier(tier: str = "bands", scale: float = 4.0,
+                      shift: float = 1.0):
+    """Make one bound tier *lie upward*: ``LB -> LB * scale + shift``.
+
+    An inflated lower bound violates admissibility (LB <= DTW) — the
+    cascade's seed spot-check or the engine's per-round check must trip,
+    and the degradation rerun must fall back to the trusted default
+    plan.  Only finite bounds are inflated (the -inf dead-slot identity
+    stays put, so the fault is a *plausible* tier bug, not a shape
+    error).
+    """
+
+    def hook(t, name):
+        if name != tier:
+            return t
+        return jnp.where(jnp.isfinite(t), t * scale + shift, t)
+
+    return inject("tier_out", hook)
+
+
+def nonfinite_tier(tier: str = "bands", value: float = np.nan):
+    """Replace one tier's output with NaN/Inf wholesale — the finite
+    gate must count and contain every poisoned value."""
+
+    def hook(t, name):
+        return jnp.full_like(t, value) if name == tier else t
+
+    return inject("tier_out", hook)
+
+
+def drop_compaction_candidates(n_dup: int = 1):
+    """Replay the shard_map miscompile *shape*: live candidates silently
+    lost from the compaction pack.
+
+    Overwrites the last ``n_dup`` selected candidate columns with the
+    first column's candidate — the pack now contains duplicates, so
+    ``n_dup`` real survivors were dropped without any error, exactly
+    what the jax 0.4.x ``jit(shard_map(while))`` bug did downstream.
+    The conservation guard's distinct-count must trip.  (Results stay
+    exact — dropped survivors keep their valid cheap-tier bound — which
+    is precisely why only a guard can see this fault.)
+    """
+
+    def hook(cand):
+        dup = jnp.broadcast_to(cand[:, :1], (cand.shape[0], n_dup))
+        return cand.at[:, -n_dup:].set(dup)
+
+    return inject("compaction_cand", hook)
+
+
+def corrupt_packed_rows(value: float = np.nan, rows: int = 1):
+    """NaN/Inf-corrupt the packed survivor tiles feeding the pairwise
+    tiers (the post-gather analogue of ``poison_envelopes``) — the
+    finite gate on the pairwise tier outputs must contain it."""
+
+    def hook(crows, urows, lrows):
+        bad = jnp.full_like(crows[:rows], value)
+        return (
+            crows.at[:rows].set(bad),
+            urows.at[:rows].set(bad),
+            lrows.at[:rows].set(bad),
+        )
+
+    return inject("packed_rows", hook)
+
+
+def corrupt_dtw(scale: float | None = 0.05, value: float | None = None):
+    """Corrupt the Pallas DTW dispatch's outputs (kernels/ops.py seam).
+
+    ``scale`` < 1 shrinks finite distances — verified values now sit
+    *below* valid bounds, so the admissibility guard trips and the
+    degradation fallback (reference brute force on the jnp kernels,
+    which do not pass this seam) must restore bit-equality.  ``value``
+    (e.g. NaN) overwrites finite outputs wholesale instead — the
+    engine's finite gate counts and contains them, and because a +inf
+    gate on a *verification* value may exclude a true neighbour, the
+    NaN-DTW guard also trips the fallback.
+    """
+
+    def hook(d):
+        fin = jnp.isfinite(d)
+        if value is not None:
+            return jnp.where(fin, jnp.full_like(d, value), d)
+        return jnp.where(fin, d * scale, d)
+
+    return inject("dtw_out", hook)
+
+
+def miscount_verifications(delta: int = 1):
+    """Perturb the engine's per-round ``n_dtw`` increment (add ``delta``
+    to query 0's count each round) — the accounting guard's
+    segment-sum-vs-mirror comparison must trip."""
+
+    def hook(seg):
+        return seg.at[0].add(delta)
+
+    return inject("engine_count", hook)
+
+
+def shard_dropout(shard: int = 0):
+    """Simulate a dead shard in the distributed top-k merge: shard
+    ``shard``'s all-gathered contribution comes back +inf (its
+    candidates vanish from every merge).  The distributed echo check —
+    each shard must find its own top-k intact in the gather — trips
+    conservation on the dropped shard."""
+
+    def hook(d_all):
+        return d_all.at[shard].set(jnp.inf)
+
+    return inject("allgather_topk", hook)
