@@ -84,6 +84,30 @@ PR 5 rows (self-tuning tier planner — measured mass/cost plan commits):
     w = L on the static-budget workload, where the O(L) pairwise
     bands-refinement tier's realised mass collapses to zero: the
     acceptance row (must stay >= 1, guarded in ci.yml).
+
+PR 8 rows (quantised sketch tier + store-level candidate masking):
+  * ``sketch_L256_w{26,77}_speedup_vs_nosketch`` — median paired-ratio
+    wall-clock of the jitted bound pass under the planner-committed
+    plan with ``use_sketch=True`` vs the committed sketchless plan, on
+    a Kim-blind store (shared boundary values pin the O(1) tier's
+    first/last terms to zero, shared interior extrema spikes pin its
+    max/min terms): the sketchless planner must buy its pruning from
+    the O(L) bands tier, the sketch side buys the same mass from the
+    O(S) int8 tier.  Must stay >= 0.95 everywhere and > 1 here
+    (ci.yml); this is the HBM-scale story — the per-pair bound read
+    shrinks from the f32 envelopes to a 32-byte sketch.
+  * ``sketch_L256_w{26,77}_tier_mass`` — the sketch tier's measured
+    realised pruning mass from the committed decision's stats (the
+    evidence the planner kept it on merit, not by fiat).
+  * ``sketch_L256_w{26,77}_bytes_per_cand`` — int8 sketch store bytes
+    per candidate ((sk_lo + sk_hi) / N; the () f32 scale is
+    store-wide).  The acceptance budget is <= 32 (S = 16 segments x 2
+    envelopes x 1 byte), guarded in ci.yml.
+  * ``mask_dense_skip_frac`` — fraction of the store the build-time
+    LOO sketch mask (``build_index(..., mask=True)``) retires outright
+    on a store with planted outlier series: dead candidates never
+    enter the masked dense tiers or the pairwise slots.  Must stay
+    > 0 (ci.yml) — a mask that never kills is dead weight.
 """
 
 from __future__ import annotations
@@ -453,6 +477,140 @@ def _plan_records() -> list[dict]:
     return recs
 
 
+def _sketch_records() -> list[dict]:
+    """Quantised sketch tier + store-mask rows (see module docstring).
+
+    The store is *Kim-blind* by construction: every series (queries
+    included) shares its first/last four values and carries the same
+    interior +/-12 extrema spikes, so the O(1) Kim tier's boundary and
+    max/min terms are identically zero and the planner drops it on both
+    sides.  The separating signal is a constant +5 offset on the
+    background mass — exactly what a segment-mean sketch sees — so the
+    sketchless committed plan prunes with the O(L) bands tier and the
+    sketch committed plan prunes the *same* pairs with the O(S) int8
+    tier (kim/bands measure zero incremental mass behind it and are
+    dropped).  Both sides are planner-committed under the same resolved
+    budget, so the ratio prices the tier capability, not the plan
+    machinery.  Paired sampling as in the planner rows.
+    """
+    import dataclasses
+    import time as _time
+
+    import jax
+
+    from repro.search import (
+        CascadeConfig,
+        EngineConfig,
+        build_index,
+        calibrate_plan,
+        run_plan,
+    )
+    from repro.search import planner as plr
+    from repro.search.pipeline import resolve_adaptive_budget
+
+    recs = []
+    Q, L, k = _SCHED_Q, _SCHED_L, 1
+    rng = np.random.default_rng(11)
+    queries = 0.1 * rng.normal(size=(Q, L)).astype(np.float32)
+    near = queries + 0.05 * rng.normal(size=(Q, L)).astype(np.float32)
+    far = 5.0 + 0.1 * rng.normal(size=(176, L)).astype(np.float32)
+
+    def _kim_blind(x):
+        x = np.array(x, np.float32, copy=True)
+        edge = np.linspace(0.0, 0.3, 4, dtype=np.float32)
+        x[:, :4] = edge
+        x[:, -4:] = edge[::-1]
+        x[:, 10] = 12.0                       # shared global max
+        x[:, 20] = -12.0                      # shared global min
+        return x
+
+    queries, near, far = map(_kim_blind, (queries, near, far))
+    series = np.concatenate([near, far], axis=0)          # N = 192
+    q = jnp.asarray(queries)
+    for frac in _SCHED_W_FRACTIONS:
+        w = max(1, int(round(frac * L)))
+        idx = build_index(series, w)
+        c_ns = CascadeConfig(w=w, use_pallas=False)
+        c_sk = CascadeConfig(w=w, use_pallas=False, use_sketch=True)
+        budget = resolve_adaptive_budget(q, idx, c_ns, k, None)
+        c_ns = dataclasses.replace(c_ns, survivor_budget=budget)
+        c_sk = dataclasses.replace(c_sk, survivor_budget=budget)
+        plr.plan_cache_clear()
+        dec_ns = calibrate_plan(q, idx, c_ns, k)
+        dec_sk = calibrate_plan(q, idx, c_sk, k)
+        ns_fn = jax.jit(
+            lambda qq, _p=dec_ns.plan, _c=c_ns: run_plan(
+                qq, idx, _c, _p, k=k).lb
+        )
+        sk_fn = jax.jit(
+            lambda qq, _p=dec_sk.plan, _c=c_sk: run_plan(
+                qq, idx, _c, _p, k=k).lb
+        )
+        jax.block_until_ready(ns_fn(q))
+        jax.block_until_ready(sk_fn(q))
+        ratios = []
+        for _ in range(25):
+            t0 = _time.perf_counter()
+            jax.block_until_ready(ns_fn(q))
+            t_n = _time.perf_counter() - t0
+            t0 = _time.perf_counter()
+            jax.block_until_ready(sk_fn(q))
+            ratios.append(t_n / (_time.perf_counter() - t0))
+        names = list(dec_sk.stats.names)
+        s_mass = float(np.asarray(dec_sk.stats.mass)[names.index("sketch")])
+        bpc = float(idx.sk_lo.nbytes + idx.sk_hi.nbytes) / idx.n
+        recs.append(dict(
+            name=f"sketch_L256_w{w}_tier_mass",
+            us_per_call=s_mass,
+            derived="sketch-tier realised pruning mass over "
+                    f"{int(dec_sk.stats.pairs)} calibration pairs; "
+                    f"decision: {dec_sk.summary()}",
+        ))
+        recs.append(dict(
+            name=f"sketch_L256_w{w}_bytes_per_cand",
+            us_per_call=bpc,
+            derived="int8 sketch store bytes per candidate (sk_lo + "
+                    "sk_hi; the f32 scale is store-wide); acceptance "
+                    "budget <= 32, guarded in ci.yml",
+        ))
+        recs.append(dict(
+            name=f"sketch_L256_w{w}_speedup_vs_nosketch",
+            us_per_call=float(np.median(ratios)),
+            derived="median paired ratio: committed sketchless bound "
+                    "pass / committed use_sketch bound pass on the "
+                    "Kim-blind store (sketchless plan "
+                    f"{list(dec_ns.order)}, sketch plan "
+                    f"{list(dec_sk.order)}); CI floor 0.95",
+        ))
+    # --- store-level candidate masking: planted dead mass is retired ---
+    # outlier rows sit *off* the N=128 calibration stride
+    # (planner.calibration_sample picks [0, 18, ..., 127]), so no
+    # calibration query keeps them: provably dead under any tau
+    rng2 = np.random.default_rng(5)
+    walks = np.cumsum(
+        rng2.normal(size=(128, 64)).astype(np.float32), axis=1
+    )
+    out_rows = np.array([5, 40, 70, 100])
+    walks[out_rows] += 50.0
+    mcfg = EngineConfig(
+        cascade=CascadeConfig(w=12, use_pallas=False, use_sketch=True),
+        k=2,
+    )
+    plr.plan_cache_clear()
+    midx = build_index(walks, 12, calibrate=mcfg, mask=True)
+    live = np.asarray(midx.live)
+    recs.append(dict(
+        name="mask_dense_skip_frac",
+        us_per_call=float(1.0 - live.mean()),
+        derived=f"store fraction retired by the LOO sketch mask "
+                f"({int((~live).sum())}/128 dead; all {len(out_rows)} "
+                f"planted outliers dead: {bool(not live[out_rows].any())});"
+                " CI requires > 0",
+    ))
+    plr.plan_cache_clear()
+    return recs
+
+
 def _guard_records() -> list[dict]:
     """Price the default-on exactness guards (search/guards.py).
 
@@ -652,6 +810,9 @@ def kernel_records() -> list[dict]:
 
     # --- self-tuning planner: measured mass/cost plan commits -------------
     recs.extend(_plan_records())
+
+    # --- quantised sketch tier + store-level candidate masking ------------
+    recs.extend(_sketch_records())
 
     # --- exactness guards: fractional overhead on the bound pass ----------
     recs.extend(_guard_records())

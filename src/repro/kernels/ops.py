@@ -27,6 +27,7 @@ from repro.kernels.lb_enhanced import lb_enhanced_pallas
 from repro.kernels.lb_enhanced_pairwise import lb_enhanced_pairwise_pallas
 from repro.kernels.lb_keogh import lb_keogh_pallas
 from repro.kernels.mamba_scan import mamba_scan_pallas
+from repro.kernels.sketch import sketch_bound_pallas
 from repro.kernels.tiling import apply_pair_perm, stream_geometry
 
 Array = jax.Array
@@ -109,6 +110,33 @@ def lb_enhanced_pairwise_op(
         q, c, u, lo, w, v, live=live, bands_only=bands_only,
         interpret=_interpret(),
     )
+
+
+# the sketch kernel holds the (Q, S) query block resident per tile;
+# beyond this many queries the op batches the reference instead
+_SKETCH_MAX_Q = 4096
+
+
+def sketch_bound_op(
+    qbar: Array, sk_lo: Array, sk_hi: Array, sk_scale: Array,
+    seg_sizes: Array,
+) -> Array:
+    """``(Q, S) f32 x (N, S) int8 -> (Q, N)`` tier-(-1) sketch bounds.
+
+    The quantised segment-reduced LB_Keogh over the int8 PAA sketch
+    store (search/index.py documents the layout; kernels/sketch.py the
+    kernel).  Host-side it rewrites the operands into the kernel's
+    scaled-units form — the kernel never sees ``sk_scale``.
+    """
+    qbar = jnp.asarray(qbar, jnp.float32)
+    if qbar.shape[0] > _SKETCH_MAX_Q:
+        return ref.sketch_bound_ref(qbar, sk_lo, sk_hi, sk_scale,
+                                    seg_sizes)
+    scale = jnp.asarray(sk_scale, jnp.float32)
+    qs = qbar / scale
+    wseg = jnp.asarray(seg_sizes, jnp.float32) * scale * scale
+    return sketch_bound_pallas(qs, sk_lo, sk_hi, wseg,
+                               interpret=_interpret())
 
 
 def dtw_band_op(

@@ -85,6 +85,33 @@ def lb_enhanced_pairwise_ref(
     return out
 
 
+def sketch_bound_ref(
+    qbar: Array, sk_lo: Array, sk_hi: Array, sk_scale: Array,
+    seg_sizes: Array,
+) -> Array:
+    """``(Q, S) f32 x (N, S) int8 -> (Q, N)`` tier-(-1) sketch bounds.
+
+    The quantised segment-reduced LB_Keogh (see search/index.py for the
+    layout and admissibility argument), in the same *scaled-units*
+    formulation as the Pallas kernel (kernels/sketch.py): the query means
+    are divided by ``sk_scale`` and ``sk_scale^2`` folds into the
+    per-segment Cauchy-Schwarz weights, so the int8 features are compared
+    without dequantising — kernel/oracle parity is exact up to summation
+    order.
+    """
+    scale = jnp.asarray(sk_scale, jnp.float32)
+    qs = jnp.asarray(qbar, jnp.float32) / scale
+    wseg = jnp.asarray(seg_sizes, jnp.float32) * scale * scale    # (S,)
+    lo = sk_lo.astype(jnp.float32)
+    hi = sk_hi.astype(jnp.float32)
+    d = jnp.maximum(
+        jnp.maximum(qs[:, None, :] - hi[None, :, :],
+                    lo[None, :, :] - qs[:, None, :]),
+        0.0,
+    )
+    return jnp.sum(wseg * d * d, axis=-1)
+
+
 def dtw_band_ref(
     a: Array, b: Array, w: int | None = None, cutoff: Array | None = None,
     *, row_block: int | None = None, perm: Array | None = None,

@@ -1,0 +1,116 @@
+"""Pallas TPU kernel: tier-(-1) quantised sketch bounds, Q x N in one pass.
+
+The sketch tier (search/pipeline.py) is the first tier whose *memory
+format* differs from the store's: instead of the ``(N, L)`` float32
+series, each candidate contributes ``2 S`` int8 cells — the outward-
+quantised per-segment means of its w-envelope (search/index.py documents
+the layout and the admissibility argument).  At ``S = 16`` that is 32
+bytes/candidate, so a 10M-candidate sketch store is ~320 MB and stays
+VMEM/HBM-resident where the raw series cannot; the kernel streams
+candidate tiles of the int8 features past a resident query block and
+emits the full ``(Q, N)`` bound matrix in one pass.
+
+Scaled-units formulation: rather than dequantising the features and
+carrying ``scale`` into the kernel, the host pre-divides the query
+segment means by ``scale`` and folds ``scale^2`` into the per-segment
+Cauchy-Schwarz weights::
+
+    qs   = qbar / scale                       (Q, S) f32
+    wseg = n_j * scale^2                      (S,)  f32
+    out[q, n] = sum_j wseg[j] * max(qs[q,j] - sk_hi[n,j],
+                                    sk_lo[n,j] - qs[q,j], 0)^2
+
+so the kernel touches only the int8 features (cast to f32 in-register),
+one resident ``(Q, S)`` query block and one ``(1, S)`` weight row.  The
+jnp reference (ref.sketch_bound_ref) computes the *same* formulation, so
+kernel/oracle parity is exact up to summation order.
+
+The segment loop is a static Python loop (``S <= 16``): each step is one
+``(Q, TC)`` broadcast max + multiply-accumulate, all VPU-elementwise —
+no per-cell indexing, no reductions besides the accumulate.
+
+VMEM: per candidate tile — ``2 S`` int8 features + their f32 casts +
+the ``(Q, TC)`` output column; ``tiling.sketch_tile_c`` auto-shrinks the
+tile (128-lane multiples) to stay inside ``_VMEM_BUDGET``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.tiling import sketch_tile_c
+
+Array = jax.Array
+
+_VMEM_BUDGET = 8 * 2**20
+
+
+def _sketch_kernel(qs_ref, wseg_ref, lo_ref, hi_ref, out_ref, *, S: int):
+    qs = qs_ref[...]                                    # (Q, S)
+    lo = lo_ref[...].astype(jnp.float32)                # (TC, S)
+    hi = hi_ref[...].astype(jnp.float32)
+    acc = jnp.zeros(out_ref.shape, out_ref.dtype)       # (Q, TC)
+    for j in range(S):                                  # static, S <= 16
+        d = jnp.maximum(
+            jnp.maximum(qs[:, j:j + 1] - hi[:, j][None, :],
+                        lo[:, j][None, :] - qs[:, j:j + 1]),
+            0.0,
+        )
+        acc = acc + wseg_ref[0, j] * d * d
+    out_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("tile_c", "interpret"))
+def sketch_bound_pallas(
+    qs: Array,
+    sk_lo: Array,
+    sk_hi: Array,
+    wseg: Array,
+    *,
+    tile_c: int | None = None,
+    interpret: bool = False,
+) -> Array:
+    """``(Q, S) x (N, S) int8 -> (Q, N)`` sketch bounds (scaled units).
+
+    Inputs are the scaled-units operands (module docstring): ``qs`` the
+    scale-divided query segment means, ``wseg`` the ``n_j * scale^2``
+    weights.  ``ops.sketch_bound_op`` builds them from the raw index
+    features; call that, not this, unless you already have them.
+    """
+    Q, S = qs.shape
+    N = sk_lo.shape[0]
+    tc = sketch_tile_c(Q, S, N, _VMEM_BUDGET) if tile_c is None else tile_c
+    wrow = jnp.asarray(wseg, jnp.float32).reshape(1, S)
+    # pad the candidate axis to a tile multiple with an *inverted*
+    # envelope (lo=+127 > hi=-127): pad columns score a huge finite
+    # bound and are sliced off below either way
+    pc = (-N) % tc
+    if pc:
+        sk_lo = jnp.pad(sk_lo, ((0, pc), (0, 0)), constant_values=127)
+        sk_hi = jnp.pad(sk_hi, ((0, pc), (0, 0)), constant_values=-127)
+    Np = N + pc
+    kern = functools.partial(_sketch_kernel, S=S)
+    out_shape = jax.ShapeDtypeStruct((Q, Np), jnp.float32)
+    single = Np == tc
+    if single:
+        out = pl.pallas_call(kern, out_shape=out_shape,
+                             interpret=interpret)(qs, wrow, sk_lo, sk_hi)
+    else:
+        out = pl.pallas_call(
+            kern,
+            grid=(Np // tc,),
+            in_specs=[
+                pl.BlockSpec((Q, S), lambda i: (0, 0)),
+                pl.BlockSpec((1, S), lambda i: (0, 0)),
+                pl.BlockSpec((tc, S), lambda i: (i, 0)),
+                pl.BlockSpec((tc, S), lambda i: (i, 0)),
+            ],
+            out_specs=pl.BlockSpec((Q, tc), lambda i: (0, i)),
+            out_shape=out_shape,
+            interpret=interpret,
+        )(qs, wrow, sk_lo, sk_hi)
+    return out[:, :N]

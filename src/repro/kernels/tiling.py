@@ -63,6 +63,19 @@ def pick_pair_tile(tile_p: int, P: int, per_row_bytes: int,
     return min(tile_p, round_up(P, 8))
 
 
+def sketch_tile_c(Q: int, S: int, C: int, budget_bytes: int) -> int:
+    """Candidate-tile width for the sketch kernel (kernels/sketch.py).
+
+    Per candidate: ``2 S`` int8 feature cells, their f32 in-register
+    casts (``8 S``), and the ``(Q, tile)`` output column (``4 Q``).
+    Lane multiples of 128, floor 128, clamped so a short store is a
+    single tile.
+    """
+    per_c = 2 * S + 8 * S + 4 * Q
+    tile = max(128, (budget_bytes // max(1, per_c)) // 128 * 128)
+    return min(tile, round_up(C, 128))
+
+
 def sched_pair_tile(P: int, default: int = 128) -> int:
     """Pair-tile size for a *bound-ordered* verification round.
 
@@ -86,12 +99,43 @@ def sched_pair_tile(P: int, default: int = 128) -> int:
 # is all overhead, so the block never shrinks below 64 steps
 _STREAM_MIN_BLOCK = 64
 
-# preferred streaming block floor: each block pays a fixed pipeline cost
-# (DMA issue + warm-up latency), so short sweeps amortise better with
-# fewer, larger blocks than the resident grid's ~8-block policy — this is
-# what keeps the streaming path within ~10% of the resident grid at
-# lengths residency still handles (the bench's *_speedup_vs_resident key)
-_STREAM_PREF_BLOCK = 1024
+# Fixed per-block pipeline cost of the streaming grid, expressed in
+# single-lane-width anti-diagonal sweep steps: issuing a block's two
+# operand-window copies plus pipeline warm-up costs about as much as this
+# many steps of band-width-128 sweep work.  Measured from the committed
+# dtw_band_stream_L2048_* vs *_resident paired timings
+# (benchmarks/kernel_bench.py): the pipeline overhead that put streaming
+# at ~0.95x resident under the old hard-coded 1024-step floor is ~4
+# block issues over 4095 steps.
+_STREAM_DMA_ISSUE_STEPS = 64
+
+# per-block fixed cost must stay under this fraction of the block's
+# sweep work for the pipeline to track the resident grid within ~10%
+_STREAM_OVERHEAD_FRAC = 1.0 / 16.0
+
+
+def stream_pref_block(
+    wb: int,
+    *,
+    dma_issue_steps: int = _STREAM_DMA_ISSUE_STEPS,
+    overhead_frac: float = _STREAM_OVERHEAD_FRAC,
+) -> int:
+    """Preferred streaming row-block floor for band halfwidth ``wb``.
+
+    Replaces the old hard-coded 1024-step floor: the block only needs to
+    be large enough that the fixed per-block pipeline cost
+    (``dma_issue_steps``, measured — see the constant above) stays under
+    ``overhead_frac`` of the block's sweep work.  A step sweeps
+    ``2 wb + 1`` band lanes, so wide bands do more work per step and
+    amortise the issue cost with *smaller* blocks — narrow bands
+    (``2 wb + 1 <= 128``, one VPU lane group) still get the old
+    1024-step floor, which falls out of the same arithmetic.  Abandon
+    boundaries moving with the floor never changes values (frontier
+    minima are monotone — core/dtw.py), only how soon a dead tile stops.
+    """
+    work_per_step = max(1.0, (2 * wb + 1) / 128.0)
+    need = dma_issue_steps / (overhead_frac * work_per_step)
+    return round_up(max(_STREAM_MIN_BLOCK, int(need)), _STREAM_MIN_BLOCK)
 
 
 def stream_geometry(
@@ -101,6 +145,7 @@ def stream_geometry(
     P: int,
     budget_bytes: int,
     row_block: int | None = None,
+    pref_block: int | None = None,
 ) -> tuple[int, int] | None:
     """Per-block working-set budget for the streaming DTW kernel.
 
@@ -114,17 +159,19 @@ def stream_geometry(
     falls back to the jnp reference there).
 
     The default block is the shared ``row_block_policy`` (abandon
-    boundaries match the jnp reference) floored at ``_STREAM_PREF_BLOCK``
-    steps: short sweeps amortise the per-block pipeline cost (DMA issue +
-    warm-up) poorly, and moving an abandon boundary never changes values
-    (frontier minima are monotone — see core/dtw.py), only how soon a
-    dead tile stops.
+    boundaries match the jnp reference) floored at ``pref_block`` steps —
+    by default the band-width-aware ``stream_pref_block(wb)`` policy:
+    short sweeps amortise the fixed per-block pipeline cost (DMA issue +
+    warm-up) poorly, so the floor is sized so that cost stays a bounded
+    fraction of each block's sweep work.  Callers with their own
+    measured issue cost pass ``pref_block`` explicitly.
     """
     from repro.core.dtw import row_block_policy
 
     D = 2 * L - 1
+    pref = stream_pref_block(wb) if pref_block is None else pref_block
     R = row_block if row_block is not None else max(
-        row_block_policy(L), min(_STREAM_PREF_BLOCK, D))
+        row_block_policy(L), min(pref, D))
     R = max(1, min(R, D))
     while True:
         Wwin = round_up(R + Wb_pad(wb), 128)

@@ -5,6 +5,9 @@ DESIGN — vocabulary (defined in search/pipeline.py, executed here):
   * **tier** (``BoundTier``): one bound stage with a *cost class* and a
     *scope*.  The default plan is the paper's cascade expressed as data:
 
+      tier "sketch"             O(S)/pair    all_pairs  int8 PAA features
+                                (tier -1, ``cfg.use_sketch`` — reads the
+                                quantised feature store, never the series)
       tier "kim"                O(1)/pair    all_pairs  index features
       tier "bands"              O(V^2)/pair  all_pairs  bands (Alg. 1 1-11)
       tier "enhanced_pairwise"  O(L)/pair    pairwise   bands+Keogh bridge
@@ -121,6 +124,11 @@ class CascadeConfig:
       v: LB_ENHANCED speed-tightness parameter (paper SS III-A); the paper's
          recommended V=4 is the default.
       use_kim: include the O(1) Kim tier in the default plans.
+      use_sketch: prepend the tier-(-1) quantised sketch tier to the
+        default plans (pipeline.py).  Off by default: the tier only pays
+        on an index built with sketch features (``build_index`` computes
+        them by default) — without features it scores an all-zero bound
+        that the planner measures idle and drops.
       candidate_chunk: candidates per fused-kernel invocation (VMEM tiling).
       use_pallas: route the bound tiers through the Pallas kernels (True) or
         the pure-jnp references (False).  The jnp path is used when lowering
@@ -140,6 +148,7 @@ class CascadeConfig:
     w: int
     v: int = 4
     use_kim: bool = True
+    use_sketch: bool = False
     candidate_chunk: int = 512
     use_pallas: bool = True
     staged: bool = True
@@ -328,9 +337,13 @@ def compute_bounds(
             f"({[t.name for t in plan.pairwise_tiers]}); use a dense_plan "
             "or enable staging"
         )
+    store_live = getattr(index, "live", None)
     lb = None
     for tier in plan.all_pairs_tiers:
-        t = tier.fn(q, index, cfg)
+        if store_live is not None and _accepts_live(tier.fn):
+            t = tier.fn(q, index, cfg, live=store_live)
+        else:
+            t = tier.fn(q, index, cfg)
         lb = t if lb is None else jnp.maximum(lb, t)
     if lb is None:
         lb = jnp.zeros((q.shape[0], index.n), q.dtype)
@@ -428,11 +441,27 @@ def run_plan(
     a_checked = a_viol = a_gap = z32               # admissibility
 
     # ---- all-pairs tiers, in plan order (running elementwise max) ------
+    # The store-level candidate mask (index.live, derived from the sketch
+    # store at build time — search/index.py) feeds liveness-conforming
+    # cross-block tiers the same way the refine limit feeds pairwise
+    # tiers: dead candidates come back -inf and whole-dead tiles skip
+    # compute.  Tiers without ``live`` support (kim, sketch — the sketch
+    # tier *derives* the mask and must never consume it) score everyone,
+    # so every dead candidate keeps a finite cheap bound: the mask can
+    # only remove work, never a neighbour (exactness argument in
+    # search/index.py).
+    store_live = getattr(index, "live", None)
     lb01 = None
     ap_snaps = []                      # running max after each tier (stats)
+    ap_masked = []                     # which tiers saw the store mask
     hook_tier = _guards.fault_hook("tier_out")
     for tier in plan.all_pairs_tiers:
-        t = tier.fn(q, index, cfg)
+        masked = store_live is not None and _accepts_live(tier.fn)
+        ap_masked.append(masked)
+        if masked:
+            t = tier.fn(q, index, cfg, live=store_live)
+        else:
+            t = tier.fn(q, index, cfg)
         if hook_tier is not None:
             t = hook_tier(t, tier.name)
         if gon and g.finite_gates:
@@ -476,6 +505,7 @@ def run_plan(
         chunk = min(cfg.candidate_chunk, W)
         cols = []
         pw_snaps = [[] for _ in pairwise_tiers]   # per-tier running max
+        plive = None                   # live pair count under any masking
         for s in range(0, W, chunk):
             e = min(s + chunk, W)
             cidx = cand[:, s:e].reshape(-1)          # (Q * bc,)
@@ -491,12 +521,18 @@ def run_plan(
             # queries yield whole dead pair tiles and the tier kernels
             # skip them outright (dead slots come back -inf — the
             # identity of the scatter-max below, so unrefined slots keep
-            # their cheap tier-0/1 bound)
+            # their cheap tier-0/1 bound).  The store-level mask ANDs in
+            # per *candidate*: a dead-store slot is dead in every
+            # query's allocation.
             slot = jnp.arange(s, e)[None, :]
-            live = (
-                None if limit is None
-                else (slot < limit[:, None]).reshape(-1)     # (Q * bc,)
-            )
+            live2d = None if limit is None else (slot < limit[:, None])
+            if store_live is not None:
+                sl = store_live[cidx].reshape(Q, e - s)
+                live2d = sl if live2d is None else (live2d & sl)
+            live = None if live2d is None else live2d.reshape(-1)
+            if live2d is not None:
+                c = jnp.sum(live2d).astype(jnp.float32)
+                plive = c if plive is None else plive + c
             pe = None
             for ti, tier in enumerate(pairwise_tiers):
                 if live is not None and _accepts_live(tier.fn):
@@ -514,14 +550,14 @@ def run_plan(
                     # the -inf scatter-max identity (the belt mask keeps
                     # pre-liveness custom tiers honest here too)
                     snap = pe.reshape(Q, e - s)
-                    if limit is not None:
-                        snap = jnp.where(slot < limit[:, None], snap, -_INF)
+                    if live2d is not None:
+                        snap = jnp.where(live2d, snap, -_INF)
                     pw_snaps[ti].append(snap)
             block = pe.reshape(Q, e - s)
-            if limit is not None:
+            if live2d is not None:
                 # belt for tiers without ``live`` support: the mask is
                 # idempotent over the kernel's own -inf dead slots
-                block = jnp.where(slot < limit[:, None], block, -_INF)
+                block = jnp.where(live2d, block, -_INF)
             cols.append(block)
         enh = jnp.concatenate(cols, axis=1) if len(cols) > 1 else cols[0]
         lb = lb01.at[qarange[:, None], cand].max(enh)
@@ -594,17 +630,35 @@ def run_plan(
                 newly = newly & ~emask
             return jnp.sum(newly).astype(jnp.float32)
 
+        # the sketch tier's "O(S)" cost class prices by the committed
+        # segment count; tiers on an unsketched index keep the default
+        s_sk = (
+            int(index.sk_lo.shape[1])
+            if getattr(index, "sk_lo", None) is not None else 16
+        )
         names, costs, scopes = [], [], []
         mass, scored, work = [], [], []
         prev_ap = jnp.zeros((Q, n), q.dtype)
+        n_live = (
+            None if store_live is None
+            else jnp.sum(store_live).astype(jnp.float32)
+        )
         for i, tier in enumerate(plan.all_pairs_tiers):
             names.append(tier.name)
             costs.append(tier.cost)
             scopes.append(tier.scope)
             mass.append(_crossed(prev_ap, ap_snaps[i], excl))
-            sc = jnp.asarray(float(Q * n), jnp.float32)
+            # a store-masked cross-block tier scores only live columns —
+            # that is the work the planner prices
+            sc = (
+                jnp.asarray(float(Q), jnp.float32) * n_live
+                if ap_masked[i]
+                else jnp.asarray(float(Q * n), jnp.float32)
+            )
             scored.append(sc)
-            work.append(sc * tier_cost_weight(tier.cost, L, cfg.v, cfg.w))
+            work.append(
+                sc * tier_cost_weight(tier.cost, L, cfg.v, cfg.w, s_sk)
+            )
             prev_ap = ap_snaps[i]
         if pairwise_tiers:
             base = lb01[qarange[:, None], cand]               # (Q, W)
@@ -614,7 +668,7 @@ def run_plan(
             # the belt mask holds pre-liveness custom tiers to the same
             # semantics
             pscored = (
-                jnp.sum(limit).astype(jnp.float32) if limit is not None
+                plive if plive is not None
                 else jnp.asarray(float(Q * W), jnp.float32)
             )
             prev_pw = base
@@ -630,7 +684,8 @@ def run_plan(
                 mass.append(_crossed(prev_pw, cur_pw, pexcl))
                 scored.append(pscored)
                 work.append(
-                    pscored * tier_cost_weight(tier.cost, L, cfg.v, cfg.w)
+                    pscored
+                    * tier_cost_weight(tier.cost, L, cfg.v, cfg.w, s_sk)
                 )
                 prev_pw = cur_pw
         surv_key = (
@@ -681,12 +736,19 @@ def staged_bounds(
                     exclude=exclude)
 
 
-def bands_prefilter(q: Array, index: DTWIndex, cfg: CascadeConfig) -> Array:
+def bands_prefilter(
+    q: Array, index: DTWIndex, cfg: CascadeConfig,
+    *, live: Array | None = None,
+) -> Array:
     """(Q, N) bands-only tier (Alg. 1 lines 1-11) — the cheap pre-bound.
 
     The ``bands`` tier's bound fn: picks compaction survivors before the
     pipeline pays for the O(L) bridge; on the roofline it is ~V^2/L of the
     pairwise tier.
+
+    ``live`` (optional ``(N,)``) is the store-level candidate mask
+    (search/index.py): dead candidates come back ``-inf`` and fully-dead
+    candidate tiles skip their compute in the kernel.
     """
     n = index.n
     chunk = min(cfg.candidate_chunk, n)
@@ -701,6 +763,7 @@ def bands_prefilter(q: Array, index: DTWIndex, cfg: CascadeConfig) -> Array:
             index.lower[s:e],
             cfg.w,
             cfg.v,
+            live=None if live is None else live[s:e],
             bands_only=True,
         )
 

@@ -282,20 +282,34 @@ def _build_step(
     global_budget: bool = True,
     plan: VerificationPlan | None = None,
     with_guards: bool = False,
+    with_sketch: bool = False,
 ):
     """The raw (unjitted) shard_map search step — shared by
     ``make_distributed_search`` and the preflight canary (which must
     build the *real* step: the minimal while_loop repro does not trip
-    the 0.4.x miscompile, the engine's verification loop does)."""
+    the 0.4.x miscompile, the engine's verification loop does).
+
+    ``with_sketch`` extends the leaf contract with the quantised sketch
+    store (search/index.py): ``sk_lo``/``sk_hi`` row-shard along N like
+    every per-candidate feature, ``sk_scale`` (a store-wide scalar)
+    replicates, and the store-level candidate mask ``live`` vec-shards
+    along N — the mask is per *candidate*, so each shard masks exactly
+    its own rows and the top-k merge semantics are untouched (dead
+    candidates keep their finite cheap-tier bounds; see cascade.run_plan).
+    ``False`` (the default) keeps the historical 7-leaf shape that the
+    preflight canary, the subprocess repro scripts, and every existing
+    caller pin."""
     axes = tuple(data_axes)
     if plan is None:
         plan = _default_distributed_plan(cfg, axes, global_budget)
     gcfg = _guards.resolve_guards(cfg.guards)
 
-    def local_step(series, labels, upper, lower, kim, kim_ok, queries):
+    def local_step(series, labels, upper, lower, kim, kim_ok, queries,
+                   sk_lo=None, sk_hi=None, sk_scale=None, live=None):
         index = DTWIndex(
             series=series, labels=labels, upper=upper, lower=lower,
             kim=kim, kim_ok=kim_ok, w=cfg.cascade.w,
+            sk_lo=sk_lo, sk_hi=sk_hi, sk_scale=sk_scale, live=live,
         )
         res, grep = nn_search(index, queries, cfg, plan=plan,
                               with_guards=True)
@@ -349,6 +363,13 @@ def _build_step(
         P(axes, None),   # kim_ok      (N, 2)
         P(query_axis, None),  # queries (Q, L) sharded on Q
     )
+    if with_sketch:
+        in_specs = in_specs + (
+            P(axes, None),   # sk_lo    (N, S)  int8, sharded on N
+            P(axes, None),   # sk_hi    (N, S)  int8, sharded on N
+            P(),             # sk_scale ()      store-wide, replicated
+            P(axes),         # live     (N,)    candidate mask, sharded
+        )
     out_specs = (P(query_axis, None), P(query_axis, None), P(query_axis))
     if with_guards:
         out_specs = out_specs + (P(None),)     # replicated guard vector
@@ -368,6 +389,7 @@ def make_distributed_search(
     plan: VerificationPlan | None = None,
     jit: bool | str = "auto",
     with_guards: bool = False,
+    with_sketch: bool = False,
 ):
     """Build a distributed search step for ``mesh``.
 
@@ -375,6 +397,13 @@ def make_distributed_search(
     mapping sharded index leaves + queries to ``(dists, idx, n_dtw)`` with
     the query axis sharded over ``query_axis``.  Candidate indices in the
     output are *global* (shard offset applied).
+
+    ``with_sketch`` appends the quantised sketch leaves to the input
+    contract — ``step(..., queries, sk_lo, sk_hi, sk_scale, live)`` — so
+    a store built with ``build_index(sketch=..., mask=True)`` serves its
+    tier-(-1) bounds and candidate mask across the fleet (``_build_step``
+    documents the sharding; pass ``live = ones(N, bool)`` when the store
+    has features but no mask).
 
     ``global_budget`` (staged cascades only) swaps the per-shard local
     survivor budget for the mass-proportional global allocation described
@@ -406,6 +435,7 @@ def make_distributed_search(
     step = _build_step(
         mesh, cfg, data_axes=data_axes, query_axis=query_axis,
         global_budget=global_budget, plan=plan, with_guards=with_guards,
+        with_sketch=with_sketch,
     )
     if jit is False:
         return step
@@ -425,10 +455,17 @@ def make_distributed_search(
 
 
 def shard_index(mesh: Mesh, index: DTWIndex, data_axes=("data",)) -> DTWIndex:
-    """Device-put an index with its N axis sharded over the data axes."""
+    """Device-put an index with its N axis sharded over the data axes.
+
+    The sketch store shards like every other per-candidate feature:
+    ``sk_lo``/``sk_hi`` rows over the data axes, the store-wide
+    ``sk_scale`` replicated, and the candidate mask ``live`` as a sharded
+    vector.  Absent leaves stay ``None``.
+    """
     axes = tuple(data_axes)
     row = NamedSharding(mesh, P(axes, None))
     vec = NamedSharding(mesh, P(axes))
+    rep = NamedSharding(mesh, P())
     return DTWIndex(
         series=jax.device_put(index.series, row),
         labels=jax.device_put(index.labels, vec),
@@ -437,4 +474,12 @@ def shard_index(mesh: Mesh, index: DTWIndex, data_axes=("data",)) -> DTWIndex:
         kim=jax.device_put(index.kim, row),
         kim_ok=jax.device_put(index.kim_ok, row),
         w=index.w,
+        sk_lo=(None if index.sk_lo is None
+               else jax.device_put(index.sk_lo, row)),
+        sk_hi=(None if index.sk_hi is None
+               else jax.device_put(index.sk_hi, row)),
+        sk_scale=(None if index.sk_scale is None
+                  else jax.device_put(index.sk_scale, rep)),
+        live=(None if index.live is None
+              else jax.device_put(index.live, vec)),
     )

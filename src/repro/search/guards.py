@@ -108,8 +108,12 @@ selected candidates — the miscompile replay), ``packed_rows`` (NaN/Inf
 corruption of the packed survivor tiles), ``tier_out`` (corrupt a bound
 tier's output), ``dtw_out`` (corrupt the DTW kernel dispatch's results,
 kernels/ops.py), ``engine_count`` (perturb the engine's round
-accounting), and ``allgather_topk`` (simulated shard dropout in the
-distributed top-k merge).
+accounting), ``allgather_topk`` (simulated shard dropout in the
+distributed top-k merge), and ``sketch_feats`` (break the build-time
+sketch quantiser's outward-rounding invariant, search/index.py — the
+admissibility spot-check covers the tier-(-1) bound because the seeds'
+running-max ``pre`` includes the dequantised sketch term, so an
+inward-rounded store trips it like any lying tier).
 """
 
 from __future__ import annotations

@@ -2,8 +2,51 @@
 
 The index precomputes everything that depends only on the store and the
 window ``w`` (paper SS II-B: envelopes are query-independent, so an index
-amortises them across every query): the Sakoe-Chiba envelopes and the O(1)
-Kim feature vector of every candidate.
+amortises them across every query): the Sakoe-Chiba envelopes, the O(1)
+Kim feature vector, and the int8 PAA *sketch* of every candidate.
+
+Sketch store layout (tier -1, ``search/pipeline.py``):
+
+  Every tier before this one reads the full ``(N, L)`` float32 store, so
+  store *size* — not compute — is the scaling wall for HBM-scale corpora.
+  The sketch is a segment-reduced, quantised view of the candidate's
+  w-envelope: split the length axis into ``S`` segments (power of two,
+  default 16; boundaries ``b[j] = j*L//S``, so ragged lengths are fine),
+  take the per-segment mean of the upper/lower envelope, and quantise
+  with *outward* rounding — ``ceil`` for the upper cells, ``floor`` for
+  the lower — onto a shared symmetric int8 grid:
+
+    sk_hi[n, j] = ceil(mean(upper[n, b[j]:b[j+1]]) / scale)   int8
+    sk_lo[n, j] = floor(mean(lower[n, b[j]:b[j+1]]) / scale)  int8
+    sk_scale    = max|segment cell| / 127 * (1 + 1e-6)        f32 scalar
+
+  (the 1e-6 headroom keeps ``|cell/scale|`` strictly below 127, so the
+  clip after ceil/floor can never round *inward* — quantisation only ever
+  widens the envelope, which is what keeps the dequantised bound
+  admissible; ``testing/faults.py::inward_quantiser`` proves the guard
+  trips when this is violated).  The bound itself is the segment-reduced
+  LB_Keogh (Cauchy-Schwarz over each segment):
+
+    LB_sketch(q, n) = sum_j n_j * max(qbar_j - sk_hi[n,j]*scale,
+                                      sk_lo[n,j]*scale - qbar_j, 0)^2
+                    <= LB_Keogh(q, n) <= DTW_w(q, n)
+
+  at 2*S = 32 bytes/candidate — a 10M-candidate sketch store is ~320 MB
+  and stays on-chip where the raw series cannot.
+
+Store-level candidate mask (``build_index(..., calibrate=cfg, mask=True)``):
+
+  ``live[n]`` marks candidates some leave-one-out calibration query keeps
+  below its measured seed threshold: after plan calibration, each sampled
+  query's k seed distances give ``tau_i`` (an upper bound on its true
+  k-th NN distance), and ``live[n] = any_i(LB_sketch(i, n) <= tau_i *
+  mask_safety)``.  A committed plan threads ``live`` into the existing
+  cross-block / pairwise liveness inputs (the kernels already take it),
+  so dense-tier work on dead candidates becomes skipped tiles.  Exactness
+  does not depend on the mask being right: masked tiers emit ``-inf``
+  for dead candidates, whose *unmasked* cheap-tier bounds (sketch, Kim)
+  stay in the running max — a dead candidate is still pruned by a valid
+  bound or verified, never silently excluded.
 """
 
 from __future__ import annotations
@@ -33,6 +76,12 @@ class DTWIndex:
       kim:     (N, 4) [first, last, max, min] Kim features.
       kim_ok:  (N, 2) feature-admissibility flags [max interior, min interior].
       w:       static window the envelopes were built for.
+      sk_lo:   (N, S) int8 outward-quantised lower envelope segment means
+               (or None when built without a sketch).
+      sk_hi:   (N, S) int8 upper counterpart.
+      sk_scale: () f32 shared symmetric dequantisation scale.
+      live:    (N,) bool store-level candidate mask (None = all live);
+               see the module docstring for derivation and exactness.
     """
 
     series: Array
@@ -42,6 +91,10 @@ class DTWIndex:
     kim: Array
     kim_ok: Array
     w: int = dataclasses.field(metadata=dict(static=True))
+    sk_lo: Array | None = None
+    sk_hi: Array | None = None
+    sk_scale: Array | None = None
+    live: Array | None = None
 
     @property
     def n(self) -> int:
@@ -69,6 +122,70 @@ def kim_features(x: Array) -> tuple[Array, Array]:
     return feats, ok
 
 
+def sketch_segments(L: int, s: int) -> tuple[tuple[int, int], ...]:
+    """Static segment boundaries ``b[j] = j*L//s`` as (start, stop) pairs.
+
+    ``s`` is halved (power-of-two discipline) while it exceeds ``L`` so a
+    short store never produces empty segments; ragged lengths (``L`` not
+    divisible by ``s``) give segments differing by one step.
+    """
+    s = max(1, int(s))
+    while s > L:
+        s //= 2
+    bounds = [j * L // s for j in range(s + 1)]
+    return tuple((bounds[j], bounds[j + 1]) for j in range(s))
+
+
+def sketch_segment_sizes(L: int, s: int) -> Array:
+    """``(S,)`` f32 segment lengths ``n_j`` (the bound's per-segment
+    Cauchy-Schwarz weights)."""
+    return jnp.asarray(
+        [b - a for a, b in sketch_segments(L, s)], jnp.float32
+    )
+
+
+def sketch_query_means(q: Array, s: int) -> Array:
+    """Per-segment f32 means of a query batch: ``(..., L) -> (..., S)``.
+
+    Query-side featurisation stays float (queries arrive at search time;
+    only the *store* side is quantised, and only outward)."""
+    segs = sketch_segments(q.shape[-1], s)
+    return jnp.stack(
+        [jnp.mean(q[..., a:b], axis=-1) for a, b in segs], axis=-1
+    )
+
+
+def sketch_features(
+    upper: Array, lower: Array, s: int = 16
+) -> tuple[Array, Array, Array]:
+    """Quantise ``(N, L)`` w-envelopes into the int8 sketch store.
+
+    Returns ``(sk_lo, sk_hi, sk_scale)`` — see the module docstring for
+    the layout and the admissibility argument.  Outward rounding is the
+    load-bearing invariant: ``sk_hi * scale >= mean(upper)`` and
+    ``sk_lo * scale <= mean(lower)`` cell-wise, always.
+    """
+    segs = sketch_segments(upper.shape[-1], s)
+    useg = jnp.stack(
+        [jnp.mean(upper[..., a:b], axis=-1) for a, b in segs], axis=-1
+    )
+    lseg = jnp.stack(
+        [jnp.mean(lower[..., a:b], axis=-1) for a, b in segs], axis=-1
+    )
+    maxabs = jnp.maximum(jnp.max(jnp.abs(useg)), jnp.max(jnp.abs(lseg)))
+    # 1e-6 headroom: |cell/scale| < 127 strictly, so the clip below can
+    # never pull a ceil'd/floor'd cell back inward
+    scale = jnp.where(maxabs > 0.0, maxabs, 1.0) * ((1.0 + 1e-6) / 127.0)
+    sk_hi = jnp.clip(jnp.ceil(useg / scale), -127, 127).astype(jnp.int8)
+    sk_lo = jnp.clip(jnp.floor(lseg / scale), -127, 127).astype(jnp.int8)
+    from repro.search import guards as _guards
+
+    hook = _guards.fault_hook("sketch_feats")
+    if hook is not None:
+        sk_lo, sk_hi = hook(sk_lo, sk_hi)
+    return sk_lo, sk_hi, scale.astype(jnp.float32)
+
+
 def build_index(
     series: Array,
     w: int,
@@ -79,6 +196,9 @@ def build_index(
     preflight: bool = False,
     calibrate: Any | None = None,
     calibrate_sample: int = 8,
+    sketch: int | None = 16,
+    mask: bool = False,
+    mask_safety: float = 2.0,
 ) -> DTWIndex:
     """Build a ``DTWIndex`` for window ``w``.
 
@@ -113,6 +233,16 @@ def build_index(
     conservative for plain queries, so the committed decision serves
     both.  Calibration requires concrete (host) inputs; it is skipped
     for unstaged cascades.
+
+    ``sketch`` sets the segment count ``S`` of the int8 PAA sketch store
+    (module docstring; ``None`` skips featurisation — the sketch tier
+    then scores a trivial all-zero bound and the planner drops it as
+    idle).  ``mask=True`` (requires ``calibrate`` and a sketch) derives
+    the store-level ``live`` mask from LOO sketch mass *before* the plan
+    is calibrated, so the committed plan prices the masked tiers;
+    ``mask_safety`` scales the per-query seed threshold (squared-distance
+    units) the mask admits candidates under — larger is more
+    conservative (more candidates stay live).
     """
     series = jnp.asarray(series, jnp.float32)
     if not isinstance(series, jax.core.Tracer):
@@ -129,6 +259,9 @@ def build_index(
         labels = jnp.full((series.shape[0],), -1, jnp.int32)
     u, lo = envelope_op(series, w)
     kim, kim_ok = kim_features(series)
+    sk_lo = sk_hi = sk_scale = None
+    if sketch is not None:
+        sk_lo, sk_hi, sk_scale = sketch_features(u, lo, sketch)
     index = DTWIndex(
         series=series,
         labels=jnp.asarray(labels, jnp.int32),
@@ -137,6 +270,9 @@ def build_index(
         kim=kim,
         kim_ok=kim_ok,
         w=w,
+        sk_lo=sk_lo,
+        sk_hi=sk_hi,
+        sk_scale=sk_scale,
     )
     if calibrate is not None:
         from repro.search.planner import calibrate_plan, calibration_sample
@@ -147,9 +283,44 @@ def build_index(
             # strided store sample: class-ordered stores get every class
             # into the measurement (planner.calibration_sample)
             pick = calibration_sample(index.n, calibrate_sample)
+            if mask and index.sk_lo is not None:
+                index = _derive_live_mask(
+                    index, cascade, k, pick, mask_safety
+                )
             calibrate_plan(
                 index.series[pick], index, cascade, k,
                 exclude=jnp.asarray(pick, jnp.int32), sample=len(pick),
                 pcfg=getattr(calibrate, "planner", None),
             )
     return index
+
+
+def _derive_live_mask(index, cascade, k, pick, mask_safety):
+    """LOO store-level mask: candidates no calibration query keeps.
+
+    Runs the cascade once on the calibration sample (leave-one-out
+    exclusion, like the plan calibration that follows) for the measured
+    seed thresholds ``tau_i`` — each an *upper* bound on query ``i``'s
+    true k-th NN distance, so thresholding the admissible sketch bound
+    under ``tau_i * mask_safety`` only over-admits, never over-kills, on
+    the calibration distribution.  Derived before ``calibrate_plan`` so
+    the committed plan prices the masked tiers.
+    """
+    import dataclasses as _dc
+
+    from repro.kernels.ref import sketch_bound_ref
+    from repro.search.cascade import run_plan
+
+    qs = index.series[pick]
+    cres = run_plan(
+        qs, index, cascade, k=k, exclude=jnp.asarray(pick, jnp.int32)
+    )
+    tau = jnp.max(
+        jnp.where(jnp.isfinite(cres.seed_d), cres.seed_d, 0.0), axis=1
+    )
+    qbar = sketch_query_means(qs, index.sk_lo.shape[1])
+    seg = sketch_segment_sizes(index.length, index.sk_lo.shape[1])
+    sb = sketch_bound_ref(qbar, index.sk_lo, index.sk_hi,
+                          index.sk_scale, seg)
+    live = jnp.any(sb <= tau[:, None] * mask_safety + 1e-6, axis=0)
+    return _dc.replace(index, live=live)

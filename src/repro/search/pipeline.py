@@ -9,12 +9,25 @@ bound tiers should *compose*, the pipeline should not care which bounds it
 is running):
 
   * ``BoundTier`` — one bound stage: a name, a *cost class* (documentation
-    + bench label: "O(1)", "O(V^2)", "O(L)"), a *scope*, and the bound
-    function itself.  ``all_pairs`` tiers produce a dense ``(Q, N)`` matrix
-    over every (query, candidate); ``pairwise`` tiers refine only the
-    compacted survivor pack — packed ``(P, L)`` rows -> ``(P,)`` bounds,
-    the layout shared by the pairwise LB kernel, the engine's flat
+    + bench label: "O(1)", "O(S)", "O(V^2)", "O(L)"), a *scope*, and the
+    bound function itself.  ``all_pairs`` tiers produce a dense ``(Q, N)``
+    matrix over every (query, candidate); ``pairwise`` tiers refine only
+    the compacted survivor pack — packed ``(P, L)`` rows -> ``(P,)``
+    bounds, the layout shared by the pairwise LB kernel, the engine's flat
     verification scheduler, and the DTW kernel's pair tiles.
+
+Tier -1 (the ``sketch`` tier) extends the scope taxonomy in one direction
+without changing it: it is an ``all_pairs`` tier like Kim, but it reads
+the index's quantised *feature* store (``index.sk_lo/sk_hi``, int8 PAA
+segment means — search/index.py), never the ``(N, L)`` series.  That is
+the design point: every tier whose operand is the raw store is bounded by
+store bandwidth at HBM scale, while a feature tier's operand is ~S bytes
+per candidate and stays resident.  Sketch-scope rules: the tier must
+score *every* candidate (the store-level ``live`` mask is derived FROM
+its bounds, so it must not consume the mask), it prices as ``"O(S)"``,
+and on an index built without features it returns the all-zero bound —
+trivially admissible, measured idle, dropped by the planner — so plans
+mentioning it compose with any index.
   * ``Compaction`` — the single pipeline stage between the all-pairs and
     pairwise tiers: gather the ``B`` best-bounded candidates per query
     (ascending running bound) into packed batches.  Its *policy* decides
@@ -249,20 +262,25 @@ def bucket_pow2(x: int, floor: int) -> int:
     return b
 
 
-def tier_cost_weight(cost: str, L: int, v: int, w: int) -> float:
+def tier_cost_weight(cost: str, L: int, v: int, w: int,
+                     s: int = 16) -> float:
     """Per-pair work weight of a tier's declared cost class.
 
     The cost class strings were documentation until now; the planner
     prices tiers with them, so the executor turns them into per-pair
     weights here (one definition for stats, planner, and bench).
-    Unrecognised classes price at ``O(L)`` — the costliest *built-in*
-    class — which under-charges anything genuinely ``O(L*W)``-shaped, so
-    a custom tier above ``O(L)`` should declare one of the recognised
-    spellings to be priced (and gated) honestly.
+    ``"O(S)"`` is the sketch tier's class (``s`` = segment count of the
+    int8 feature store, default 16).  Unrecognised classes price at
+    ``O(L)`` — the costliest *built-in* class — which under-charges
+    anything genuinely ``O(L*W)``-shaped, so a custom tier above
+    ``O(L)`` should declare one of the recognised spellings to be priced
+    (and gated) honestly.
     """
     key = cost.replace(" ", "").upper()
     if key == "O(1)":
         return 1.0
+    if key == "O(S)":
+        return float(max(s, 1))
     if key == "O(V)":
         return float(max(v, 1))
     if key in ("O(V^2)", "O(V2)", "O(V*V)"):
@@ -394,6 +412,75 @@ def unregister_tier(name: str) -> bool:
     return _TIER_REGISTRY.pop(name, None) is not None
 
 
+@register_tier("sketch")
+def _sketch_tier() -> BoundTier:
+    """Tier -1: O(S)/pair quantised sketch bound from the int8 PAA
+    feature store (module docstring; search/index.py for the layout).
+
+    Scores every candidate unconditionally — the store-level ``live``
+    mask is *derived from* these bounds, so this tier must never consume
+    it.  On an index built without features the bound is all zeros
+    (valid, idle, planner-dropped), which is what lets ``default_plan``
+    include the tier without knowing the index.
+    """
+
+    def fn(q, index, cfg):
+        import jax.numpy as jnp
+
+        if getattr(index, "sk_lo", None) is None:
+            return jnp.zeros((q.shape[0], index.n), jnp.float32)
+        from repro.kernels import ref as _ref
+        from repro.kernels.ops import sketch_bound_op
+        from repro.search.index import (
+            sketch_query_means,
+            sketch_segment_sizes,
+        )
+
+        s = index.sk_lo.shape[1]
+        qbar = sketch_query_means(q, s)
+        seg = sketch_segment_sizes(index.length, s)
+        op = sketch_bound_op if cfg.use_pallas else _ref.sketch_bound_ref
+        return op(qbar, index.sk_lo, index.sk_hi, index.sk_scale, seg)
+
+    return BoundTier("sketch", cost="O(S)", scope="all_pairs", fn=fn)
+
+
+@register_tier("lb_improved")
+def _lb_improved_tier() -> BoundTier:
+    """Lemire's two-pass LB_Improved (arXiv:0811.3301) over the packed
+    survivor rows — optional, jnp-only, priced like any tier.
+
+    Pass 1 is LB_Keogh of the query against the candidate's (index-
+    precomputed) envelope; pass 2 projects the query onto that envelope
+    and runs LB_Keogh of the *candidate* against the projection's
+    envelope (core/envelopes.py — batched, so the packed ``(P, L)``
+    layout runs in one shot).  Sum of the two passes is Lemire's bound.
+    Registered but not in ``default_plan``: the point it pins is that a
+    second real bound is a config edit plus this factory — the planner
+    prices it per store and keeps it only where the measured mass says
+    the extra O(L) pass pays.
+    """
+
+    def fn(qrows, crows, urows, lrows, cfg, *, live=None):
+        import jax.numpy as jnp
+
+        from repro.core.envelopes import envelope
+        from repro.core.lower_bounds import lb_keogh_env
+
+        first = lb_keogh_env(qrows, urows, lrows)
+        proj = jnp.clip(qrows, lrows, urows)
+        up, lp = envelope(proj, cfg.w)
+        out = first + lb_keogh_env(crows, up, lp)
+        if live is not None:
+            liv = jnp.broadcast_to(
+                jnp.asarray(live), out.shape
+            ).astype(bool)
+            out = jnp.where(liv, out, float("-inf"))
+        return out
+
+    return BoundTier("lb_improved", cost="O(L)", scope="pairwise", fn=fn)
+
+
 @register_tier("kim")
 def _kim_tier() -> BoundTier:
     """O(1)/pair Kim bound from precomputed index features."""
@@ -408,12 +495,15 @@ def _kim_tier() -> BoundTier:
 
 @register_tier("bands")
 def _bands_tier() -> BoundTier:
-    """O(V^2)/pair elastic-bands tier (Alg. 1 lines 1-11)."""
+    """O(V^2)/pair elastic-bands tier (Alg. 1 lines 1-11).
 
-    def fn(q, index, cfg):
+    Honours the store-level ``live`` mask (cross-block kernel liveness:
+    dead candidates emit ``-inf``, fully-dead candidate tiles skip)."""
+
+    def fn(q, index, cfg, *, live=None):
         from repro.search.cascade import bands_prefilter
 
-        return bands_prefilter(q, index, cfg)
+        return bands_prefilter(q, index, cfg, live=live)
 
     return BoundTier("bands", cost="O(V^2)", scope="all_pairs", fn=fn)
 
@@ -435,18 +525,22 @@ def _enhanced_dense_tier() -> BoundTier:
     """O(L)/pair LB_ENHANCED^V on *all* pairs — the unstaged diagnostic
     tier (cross-block kernel shape), bypassing compaction entirely."""
 
-    def fn(q, index, cfg):
+    def fn(q, index, cfg, *, live=None):
         from repro.search.cascade import enhanced_all_pairs
 
-        return enhanced_all_pairs(q, index, cfg)
+        return enhanced_all_pairs(q, index, cfg, live=live)
 
     return BoundTier("enhanced_dense", cost="O(L)", scope="all_pairs", fn=fn)
 
 
 def default_plan(cfg, *, schedule: str = "bound") -> VerificationPlan:
-    """The paper's staged cascade as a tier list: kim -> bands -> compact
-    -> pairwise LB_ENHANCED.  ``cfg.use_kim=False`` drops the Kim tier."""
+    """The paper's staged cascade as a tier list: [sketch ->] kim ->
+    bands -> compact -> pairwise LB_ENHANCED.  ``cfg.use_sketch=True``
+    prepends the tier-(-1) sketch (safe with any index — see the sketch
+    tier factory); ``cfg.use_kim=False`` drops the Kim tier."""
     tiers = []
+    if getattr(cfg, "use_sketch", False):
+        tiers.append(get_tier("sketch"))
     if cfg.use_kim:
         tiers.append(get_tier("kim"))
     tiers.append(get_tier("bands"))
@@ -458,6 +552,8 @@ def dense_plan(cfg, *, schedule: str = "bound") -> VerificationPlan:
     """The seed behaviour: every pair pays the full O(L) tier (diagnostics
     and the baseline the staged pipeline is property-tested against)."""
     tiers = []
+    if getattr(cfg, "use_sketch", False):
+        tiers.append(get_tier("sketch"))
     if cfg.use_kim:
         tiers.append(get_tier("kim"))
     tiers.append(get_tier("enhanced_dense"))

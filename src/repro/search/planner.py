@@ -365,8 +365,15 @@ def _plan_cache_key(index, cascade, k: int, base: VerificationPlan,
         k,
         cascade.v,
         cascade.use_kim,
+        getattr(cascade, "use_sketch", False),
         cascade.use_pallas,
         cascade.survivor_budget,
+        # sketch-feature and store-mask presence change what the same
+        # tier list measures (the sketch tier is zeros without features;
+        # masked tiers score fewer pairs), so they are part of the
+        # decision's identity even though the tier names match
+        getattr(index, "sk_lo", None) is not None,
+        getattr(index, "live", None) is not None,
         _plan_sig(base),
         dataclasses.astuple(pcfg),    # thresholds change the decision
     )

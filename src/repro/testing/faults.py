@@ -22,6 +22,7 @@ The seams (see guards.py module docstring):
   ``dtw_out``           (d) -> d                kernels/ops.py DTW dispatch
   ``engine_count``      (seg) -> seg            engine per-round n_dtw inc
   ``allgather_topk``    (d_all) -> d_all        distributed top-k merge
+  ``sketch_feats``      (sk_lo, sk_hi) -> same  build-time sketch quantiser
 
 Everything is deterministic — fixed rows, fixed scales, no RNG — so a
 tripped guard reproduces bit-for-bit.
@@ -196,6 +197,34 @@ def miscount_verifications(delta: int = 1):
         return seg.at[0].add(delta)
 
     return inject("engine_count", hook)
+
+
+def inward_quantiser(steps: int = 96):
+    """Break the sketch quantiser's outward-rounding invariant.
+
+    The tier-(-1) sketch bound is admissible *because* quantisation only
+    ever widens the stored envelope (``ceil`` up, ``floor`` down —
+    search/index.py).  This injector narrows it instead: the stored
+    segment envelope pulls inward by ``steps`` int8 steps on both sides
+    (clipped to the grid), the model of a quantiser bug that rounds
+    toward zero or drops the headroom term.  Inverted envelopes
+    (``lo > hi``) make the sketch bound *positive* for pairs whose true
+    DTW is small, so the seed admissibility spot-check must trip on any
+    store whose near-neighbour distances sit below the inflated bound,
+    and the engine's degradation rerun (brute force on the jnp kernels —
+    no sketch tier at all) must restore bit-equality.
+
+    The seam lives in ``index.sketch_features`` — a *build-time* fault
+    like ``poison_envelopes``: inject around ``build_index`` and the
+    corrupted store persists for every later search.
+    """
+
+    def hook(sk_lo, sk_hi):
+        lo = jnp.clip(sk_lo.astype(jnp.int32) + steps, -127, 127)
+        hi = jnp.clip(sk_hi.astype(jnp.int32) - steps, -127, 127)
+        return lo.astype(jnp.int8), hi.astype(jnp.int8)
+
+    return inject("sketch_feats", hook)
 
 
 def shard_dropout(shard: int = 0):

@@ -143,6 +143,54 @@ print("OK", dec.summary())
 """)
 
 
+def test_distributed_sketch_masked_step_exact():
+    """The sketch store crosses the mesh: sk_lo/sk_hi row-shard, sk_scale
+    replicates, the store mask vec-shards — and the committed sketch step
+    is exact vs single-device brute force while verifying no more than
+    the sketchless step on the calibration queries (each shard masks only
+    its own rows, so the top-k merge semantics are untouched)."""
+    _run("""
+import numpy as np, jax, jax.numpy as jnp
+from repro.search import (build_index, brute_force, EngineConfig, CascadeConfig,
+                          make_distributed_search, shard_index)
+from repro.search.planner import calibration_sample
+from repro.launch.mesh import make_host_mesh
+mesh = make_host_mesh((4, 2), ("data", "model"))
+rng = np.random.default_rng(7)
+L, N, w, k = 64, 128, 12, 2
+series = np.cumsum(rng.normal(size=(N, L)), axis=1).astype(np.float32)
+cfg = EngineConfig(cascade=CascadeConfig(w=w, v=4, candidate_chunk=32,
+                                         use_pallas=False, use_sketch=True),
+                   verify_chunk=8, k=k)
+idx = build_index(series, w, calibrate=cfg, mask=True)
+assert idx.sk_lo is not None and idx.live is not None
+sidx = shard_index(mesh, idx, ("data",))
+assert sidx.sk_lo is not None and sidx.live is not None
+pick = calibration_sample(N, 8)
+qj = jnp.asarray(series[pick])
+step = make_distributed_search(mesh, cfg, data_axes=("data",),
+                               query_axis="model", with_sketch=True)
+d, i, ndtw = step(sidx.series, sidx.labels, sidx.upper, sidx.lower,
+                  sidx.kim, sidx.kim_ok, qj,
+                  sidx.sk_lo, sidx.sk_hi, sidx.sk_scale, sidx.live)
+bd, _ = brute_force(idx, series[pick], w, k=k, use_pallas=False)
+assert np.allclose(np.array(d), np.array(bd), rtol=1e-4), "sketch step != brute force"
+# sketchless baseline on the unchanged 7-leaf contract
+cfg0 = EngineConfig(cascade=CascadeConfig(w=w, v=4, candidate_chunk=32,
+                                          use_pallas=False),
+                    verify_chunk=8, k=k)
+idx0 = build_index(series, w, sketch=None)
+sidx0 = shard_index(mesh, idx0, ("data",))
+step0 = make_distributed_search(mesh, cfg0, data_axes=("data",),
+                                query_axis="model")
+d0, i0, ndtw0 = step0(sidx0.series, sidx0.labels, sidx0.upper, sidx0.lower,
+                      sidx0.kim, sidx0.kim_ok, qj)
+assert np.allclose(np.array(d0), np.array(bd), rtol=1e-4)
+assert np.all(np.array(ndtw) <= np.array(ndtw0)), (np.array(ndtw), np.array(ndtw0))
+print("OK", int(np.array(ndtw).sum()), "<=", int(np.array(ndtw0).sum()))
+""")
+
+
 def test_preflight_detects_jit_shard_map_miscompile():
     """The promoted form of the old strict-xfail ``jit(shard_map(while))``
     pin: ``preflight_shard_map`` must *agree with reality* — its verdict

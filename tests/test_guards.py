@@ -207,6 +207,35 @@ def test_miscount_verifications_trips_accounting(store):
     assert np.array_equal(np.asarray(res.dists), bd)
 
 
+def test_inward_quantiser_trips_and_degrades():
+    # build-time fault (like poison_envelopes): the corrupted sketch
+    # store persists past the injector's scope, and the *search* against
+    # it must trip the seed admissibility spot-check — the inverted
+    # envelopes inflate the tier-(-1) bound above true near-neighbour
+    # DTW distances — then degrade to reference brute force (which
+    # never reads the sketch) bit-equally
+    x, q = _store()
+    with faults.inward_quantiser():
+        bad = build_index(x, W)
+    assert bad.sk_lo is not None
+    cfg = EngineConfig(
+        cascade=CascadeConfig(w=W, v=4, candidate_chunk=16,
+                              use_pallas=False, use_sketch=True),
+        verify_chunk=8, k=K, auto_plan=False,
+    )
+    bd, bi = brute_force(bad, q, W, K, use_pallas=False)
+    res, rep, gw = _search(bad, q, cfg)
+    assert "admiss_viol" in rep.tripped()
+    assert float(np.asarray(rep.degraded)) > 0
+    assert np.array_equal(np.asarray(res.dists), np.asarray(bd))
+    assert np.array_equal(np.asarray(res.idx), np.asarray(bi))
+    # the same store searched without the sketch tier is clean: the
+    # fault lives in the sketch features alone
+    res2, rep2, _ = _search(bad, q, _cfg())
+    assert rep2.tripped() == ()
+    assert np.array_equal(np.asarray(res2.dists), np.asarray(bd))
+
+
 def test_degrade_false_reports_but_serves_raw(store, monkeypatch):
     # the env force overrides degrade=False by design — clear it so this
     # tests the config path, not the CI override

@@ -185,15 +185,35 @@ def test_stream_geometry_fits_budget():
 def test_stream_geometry_prefers_shared_policy():
     """When the policy block fits (and clears the streaming amortisation
     floor), streaming and the jnp reference make abandon decisions on
-    identical boundaries; short sweeps floor the block at
-    _STREAM_PREF_BLOCK to amortise per-block DMA issue."""
-    from repro.kernels.tiling import _STREAM_PREF_BLOCK
+    identical boundaries; the floor itself is the band-width-aware
+    ``stream_pref_block`` policy, not a hard-coded constant."""
+    from repro.kernels.tiling import stream_pref_block
 
     L, w = 8192, 410
     geom = stream_geometry(L, w, 8, 8, _VMEM_BUDGET)
     assert geom is not None and geom[1] == row_block_policy(L)
+    # wide band at a short length: the policy floor (320 steps at wb=205)
+    # no longer binds — the shared ~8-block policy wins, where the old
+    # 1024-step hard floor forced 4 oversized blocks
     geom = stream_geometry(2048, 205, 8, 8, _VMEM_BUDGET)
-    assert geom is not None and geom[1] == _STREAM_PREF_BLOCK
+    assert geom is not None
+    assert geom[1] == max(row_block_policy(2048), stream_pref_block(205))
+    assert geom[1] < 1024
+    # an explicit measured floor overrides the policy
+    geom = stream_geometry(2048, 205, 8, 8, _VMEM_BUDGET, pref_block=1024)
+    assert geom is not None and geom[1] == 1024
+
+
+def test_stream_pref_block_policy_bounds():
+    from repro.kernels.tiling import stream_pref_block
+
+    # narrow bands (one lane group) keep the old 1024-step floor
+    assert stream_pref_block(1) == 1024
+    assert stream_pref_block(63) == 1024
+    # wider bands amortise DMA issue with smaller blocks, floor 64
+    assert stream_pref_block(205) < 1024
+    assert all(stream_pref_block(wb) >= 64 for wb in (1, 205, 4096, 10**6))
+    assert all(stream_pref_block(wb) % 64 == 0 for wb in (1, 77, 205, 4096))
 
 
 # ---------------------------------------------------------------------------
